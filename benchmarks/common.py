@@ -1,0 +1,90 @@
+"""Shared benchmark scaffolding: a small PreTTR world + train/eval loops.
+
+All paper-table benchmarks run a reduced PreTTR model (CPU container) over
+the synthetic IR world (DESIGN.md §7): absolute metric values live in a
+synthetic universe, but the *relative* sweeps — quality vs l, quality vs e,
+latency vs l — reproduce the structure of the paper's Tables 3-6.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prettr import (PreTTRConfig, init_prettr, make_backbone,
+                               rank_forward, rank_pairs_loss)
+from repro.data.synthetic_ir import (SyntheticIRWorld, err_at_k, ndcg_at_k,
+                                     precision_at_k)
+from repro.optim import OptimizerConfig, adam_update, init_opt_state
+
+MAX_Q, MAX_D = 8, 32
+N_LAYERS, D_MODEL, N_HEADS, D_FF, VOCAB = 4, 48, 4, 96, 512
+
+
+def make_cfg(l: int, compress_dim: int = 0, n_layers: int = N_LAYERS,
+             d_model: int = D_MODEL) -> PreTTRConfig:
+    bb = make_backbone(n_layers=n_layers, d_model=d_model, n_heads=N_HEADS,
+                       d_ff=2 * d_model, vocab_size=VOCAB, l=l,
+                       max_len=MAX_Q + MAX_D, compute_dtype=jnp.float32,
+                       block_kv=16)
+    return PreTTRConfig(backbone=bb, l=l, max_query_len=MAX_Q,
+                        max_doc_len=MAX_D, compress_dim=compress_dim)
+
+
+def make_world(seed: int = 3) -> SyntheticIRWorld:
+    return SyntheticIRWorld(n_docs=256, n_queries=16, vocab_size=VOCAB,
+                            doc_len=MAX_D - 4, seed=seed)
+
+
+def train_ranker(cfg: PreTTRConfig, world, steps: int = 40, batch: int = 16,
+                 lr: float = 3e-3, seed: int = 0, params=None):
+    if params is None:
+        params, _ = init_prettr(jax.random.PRNGKey(seed), cfg)
+    opt_cfg = OptimizerConfig(lr=lr)
+    opt = init_opt_state(params, opt_cfg)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, opt, pos, neg):
+        loss, g = jax.value_and_grad(
+            lambda p: rank_pairs_loss(p, cfg, pos, neg))(params)
+        params, opt, _ = adam_update(g, opt, params, opt_cfg, lr=lr)
+        return params, opt, loss
+
+    for _ in range(steps):
+        pos, neg = world.pair_batch(rng, batch, MAX_Q, MAX_D)
+        params, opt, loss = step(params, opt,
+                                 jax.tree.map(jnp.asarray, pos),
+                                 jax.tree.map(jnp.asarray, neg))
+    return params, float(loss)
+
+
+def eval_ranker(params, cfg: PreTTRConfig, world, k_cands: int = 48):
+    score = jax.jit(lambda p, b: rank_forward(p, cfg, b["tokens"], b["segs"],
+                                              b["valid"]))
+    p20s, errs, ndcgs = [], [], []
+    for qi in range(world.n_queries):
+        cands = world.candidates(qi, k=k_cands)
+        rows = [world.pack_pair(world.queries[qi], world.docs[d], MAX_Q,
+                                MAX_D) for d in cands]
+        t, s, v = (jnp.asarray(np.stack(x)) for x in zip(*rows))
+        scores = np.asarray(score(params, {"tokens": t, "segs": s,
+                                           "valid": v}))
+        rels = world.qrels[qi][cands[np.argsort(-scores)]]
+        p20s.append(precision_at_k(rels, 20))
+        errs.append(err_at_k(rels, 20))
+        ndcgs.append(ndcg_at_k(rels, 20))
+    return (float(np.mean(p20s)), float(np.mean(errs)),
+            float(np.mean(ndcgs)))
+
+
+def timer(fn, *args, reps: int = 5, warmup: int = 2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps

@@ -1,0 +1,85 @@
+"""Benchmark driver: one function per paper table + the roofline report.
+Prints ``name,value,derived`` CSV rows and writes results/benchmarks.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps (CI smoke)")
+    ap.add_argument("--skip", default="", help="comma list of tables to skip")
+    args = ap.parse_args()
+    steps = 12 if args.fast else 40
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    results = {}
+    print("name,value,derived")
+
+    from benchmarks import (storage_accounting, table3_quality_vs_l,
+                            table4_compression, table5_latency,
+                            table6_other_transformers)
+
+    if "table3" not in skip:
+        t0 = time.time()
+        rows = table3_quality_vs_l.run(steps=steps)
+        results["table3_quality_vs_l"] = rows
+        for r in rows:
+            print(f"table3/l={r['l']},{r['p20']:.4f},P@20")
+        print(f"table3/runtime,{time.time()-t0:.1f},seconds")
+
+    if "table4" not in skip:
+        t0 = time.time()
+        rows = table4_compression.run(steps=steps)
+        results["table4_compression"] = rows
+        for r in rows:
+            print(f"table4/e={r['e']},{r['p20']:.4f},P@20")
+            print(f"table4/e={r['e']}/storage,{r['storage_frac']:.4f},frac_of_raw")
+        print(f"table4/runtime,{time.time()-t0:.1f},seconds")
+
+    if "table5" not in skip:
+        t0 = time.time()
+        rows = table5_latency.run()
+        results["table5_latency"] = rows
+        for r in rows:
+            print(f"table5/l={r['l']},{r['total_s']*1e6:.0f},us_per_100docs")
+            print(f"table5/l={r['l']}/speedup,{r['speedup']:.2f},x_vs_base")
+        print(f"table5/runtime,{time.time()-t0:.1f},seconds")
+
+    if "table6" not in skip:
+        t0 = time.time()
+        rows = table6_other_transformers.run(steps=steps)
+        results["table6_other_transformers"] = rows
+        for r in rows:
+            print(f"table6/{r['model']}/l={r['l']},{r['p20']:.4f},P@20")
+        print(f"table6/runtime,{time.time()-t0:.1f},seconds")
+
+    if "storage" not in skip:
+        rows = storage_accounting.run()
+        results["storage_accounting"] = rows
+        print(f"storage/clueweb_reduction,"
+              f"{rows[0]['reduction_fp16']:.4f},frac (paper: 0.975)")
+
+    if "roofline" not in skip and os.path.isdir("results/dryrun"):
+        from benchmarks import roofline
+        report = roofline.report()
+        results["roofline_table_md"] = report
+        n_rows = report.count("\n")
+        print(f"roofline/cells,{n_rows},rows (see results/benchmarks.json)")
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("benchmarks,done,results/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 4: ranking quality vs compressed representation size ``e``.
+
+For a fixed join layer l, pre-trains the compressor with the attention-MSE
+distillation loss (Eq. 2) on CAR-style pairs, then fine-tunes the full
+ranker, for e in {none, d/2, d/4, d/8} — reporting quality plus the §6.2
+storage ratio.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (D_MODEL, MAX_D, MAX_Q, eval_ranker, make_cfg,
+                               make_world, train_ranker)
+from repro.core.compression import attention_mse_loss, init_compressor
+from repro.core.prettr import init_prettr
+from repro.optim import OptimizerConfig, adam_update, init_opt_state
+
+
+def pretrain_compressor(params, cfg, world, e: int, steps: int = 20,
+                        seed: int = 0):
+    """Stage 1 (paper §4.2): distill attention maps on unlabeled text."""
+    comp, _ = init_compressor(jax.random.PRNGKey(seed), cfg.backbone.d_model,
+                              e)
+    opt_cfg = OptimizerConfig(lr=3e-3)
+    opt = init_opt_state(comp, opt_cfg)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(comp, opt, tokens):
+        loss, g = jax.value_and_grad(
+            lambda c: attention_mse_loss(params["backbone"], c, cfg.backbone,
+                                         tokens, l=cfg.l))(comp)
+        comp, opt, _ = adam_update(g, opt, comp, opt_cfg, lr=opt_cfg.lr)
+        return comp, opt, loss
+
+    first = last = None
+    for _ in range(steps):
+        batch = world.car_pairs(rng, 8, MAX_Q, MAX_D)
+        comp, opt, loss = step(comp, opt, jnp.asarray(batch["tokens"]))
+        first = first if first is not None else float(loss)
+        last = float(loss)
+    return comp, first, last
+
+
+def run(l: int = 2, steps: int = 40) -> list[dict]:
+    world = make_world()
+    rows = []
+    for e in [0, D_MODEL // 2, D_MODEL // 4, D_MODEL // 8]:
+        cfg = make_cfg(l=l, compress_dim=e)
+        params, _ = init_prettr(jax.random.PRNGKey(7), cfg)
+        mse0 = mse1 = None
+        if e:
+            comp, mse0, mse1 = pretrain_compressor(params, cfg, world, e)
+            params["compressor"] = comp
+        params, _ = train_ranker(cfg, world, steps=steps, seed=7,
+                                 params=params)
+        p20, err, ndcg = eval_ranker(params, cfg, world)
+        stored_bits = (e or D_MODEL) * 16          # fp16 store
+        raw_bits = D_MODEL * 32
+        rows.append({"e": e or "none", "p20": p20, "err20": err,
+                     "ndcg20": ndcg,
+                     "storage_frac": stored_bits / raw_bits,
+                     "attn_mse_first": mse0, "attn_mse_last": mse1})
+        print(f"[table4] e={e or 'none'}: P@20={p20:.3f} ERR@20={err:.3f} "
+              f"storage={stored_bits/raw_bits:.1%}"
+              + (f" distill {mse0:.2e}->{mse1:.2e}" if e else ""))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

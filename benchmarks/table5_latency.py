@@ -1,0 +1,102 @@
+"""Paper Table 5: query-time latency of re-ranking 100 candidates vs ``l``.
+
+Measures, per l: query-encode time (layers 0..l once per query), decompress
+time, and combine time (layers l..n over query+doc with the CLS-only final
+layer) — the exact phase split of Table 5 — plus the speedup over the base
+(l=0, full joint forward) model.  Wall-clock is CPU here; the *ratios*
+reproduce the paper's structure (cost ~ (n-l)/n with an extra kick at
+l=n-1 from the CLS-only last layer; paper: 42x at l=11/12 layers).
+
+A bigger backbone than the quality benchmarks is used so compute dominates
+dispatch overhead.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timer
+from repro.core.compression import decompress
+from repro.core.prettr import (PreTTRConfig, encode_query, init_prettr,
+                               join_and_score, make_backbone, precompute_docs,
+                               rank_forward)
+
+N_LAYERS = 8
+D_MODEL = 128
+MAX_Q, MAX_D = 16, 112
+N_DOCS = 100
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    q = jax.random.randint(key, (1, MAX_Q), 5, 1000)
+    qv = jnp.ones((1, MAX_Q), bool)
+    docs = jax.random.randint(key, (N_DOCS, MAX_D), 5, 1000)
+    dv = jnp.ones((N_DOCS, MAX_D), bool)
+    tokens = jnp.concatenate([jnp.broadcast_to(q, (N_DOCS, MAX_Q)), docs], 1)
+    segs = jnp.concatenate([jnp.zeros((N_DOCS, MAX_Q), jnp.int32),
+                            jnp.ones((N_DOCS, MAX_D), jnp.int32)], 1)
+    valid = jnp.concatenate([jnp.broadcast_to(qv, (N_DOCS, MAX_Q)), dv], 1)
+
+    base_s = None
+    for l in range(N_LAYERS):
+        e = D_MODEL // 4
+        bb = make_backbone(n_layers=N_LAYERS, d_model=D_MODEL, n_heads=8,
+                           d_ff=4 * D_MODEL, vocab_size=1024, l=l,
+                           max_len=MAX_Q + MAX_D,
+                           compute_dtype=jnp.float32, block_kv=64)
+        cfg = PreTTRConfig(backbone=bb, l=l, max_query_len=MAX_Q,
+                           max_doc_len=MAX_D, compress_dim=e)
+        params, _ = init_prettr(jax.random.PRNGKey(1), cfg)
+
+        if l == 0:
+            # base model: full joint forward over 100 candidates
+            f = jax.jit(lambda p: rank_forward(p, cfg, tokens, segs, valid))
+            total = timer(f, params)
+            base_s = total
+            rows.append({"l": 0, "total_s": total, "speedup": 1.0,
+                         "query_ms": None, "decompress_ms": None,
+                         "combine_ms": None})
+            print(f"[table5] base (l=0): {total*1e3:.1f} ms / 100 docs")
+            continue
+
+        store = precompute_docs(params, cfg, docs, dv)   # index time (free)
+        enc = jax.jit(lambda p: encode_query(p, cfg, q, qv))
+        t_query = timer(enc, params)
+        q_reps = enc(params)
+        dec = jax.jit(lambda c, s: decompress(c, s,
+                                              compute_dtype=jnp.float32))
+        t_dec = timer(dec, params["compressor"], store)
+        d_reps = dec(params["compressor"], store)
+
+        def _join(p, qr, dr):
+            # measure the combine phase on already-decompressed reps by
+            # using an uncompressed-config view of the same weights
+            cfg_nc = PreTTRConfig(backbone=bb, l=l, max_query_len=MAX_Q,
+                                  max_doc_len=MAX_D, compress_dim=0,
+                                  store_dtype=jnp.float32)
+            return join_and_score({k: v for k, v in p.items()
+                                   if k != "compressor"},
+                                  cfg_nc,
+                                  jnp.broadcast_to(qr, (N_DOCS, MAX_Q,
+                                                        D_MODEL)),
+                                  jnp.broadcast_to(qv, (N_DOCS, MAX_Q)),
+                                  dr, dv)
+
+        joinf = jax.jit(_join)
+        t_comb = timer(joinf, params, q_reps, d_reps)
+        total = t_query + t_dec + t_comb
+        rows.append({"l": l, "total_s": total, "speedup": base_s / total,
+                     "query_ms": t_query * 1e3, "decompress_ms": t_dec * 1e3,
+                     "combine_ms": t_comb * 1e3})
+        print(f"[table5] l={l}: total={total*1e3:.1f}ms "
+              f"(query={t_query*1e3:.1f} decomp={t_dec*1e3:.1f} "
+              f"combine={t_comb*1e3:.1f}) speedup={base_s/total:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Table 6: PreTTR generalizes across transformer variants.
+
+The paper tests RoBERTa (better pretraining, same 12-layer shape) and
+DistilBERT (6 layers).  We mirror with:
+* ``roberta-like`` — same depth as base, pre-LN + GELU variant,
+* ``distil-like``  — half depth.
+Each swept over l, reporting P@20 / ERR@20 (quality should hold for small l
+on both variants, as in the paper).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import (MAX_D, MAX_Q, N_LAYERS, eval_ranker,
+                               make_world, train_ranker)
+from repro.core.prettr import PreTTRConfig, make_backbone
+
+
+def variant_cfg(name: str, l: int) -> PreTTRConfig:
+    depth = {"roberta-like": N_LAYERS, "distil-like": N_LAYERS // 2}[name]
+    kw = dict(n_layers=depth, d_model=48, n_heads=4, d_ff=96, vocab_size=512,
+              l=l, max_len=MAX_Q + MAX_D, compute_dtype=jnp.float32,
+              block_kv=16)
+    bb = make_backbone(**kw)
+    if name == "roberta-like":
+        import dataclasses
+        bb = dataclasses.replace(bb, activation="gelu", norm="rmsnorm",
+                                 mlp_bias=False, rope_fraction=1.0)
+    return PreTTRConfig(backbone=bb, l=l, max_query_len=MAX_Q,
+                        max_doc_len=MAX_D, compress_dim=0)
+
+
+def run(steps: int = 40) -> list[dict]:
+    world = make_world()
+    rows = []
+    for name in ("roberta-like", "distil-like"):
+        depth = {"roberta-like": N_LAYERS, "distil-like": N_LAYERS // 2}[name]
+        for l in range(depth):
+            cfg = variant_cfg(name, l)
+            params, _ = train_ranker(cfg, world, steps=steps, seed=11)
+            p20, err, ndcg = eval_ranker(params, cfg, world)
+            rows.append({"model": name, "l": l, "p20": p20, "err20": err})
+            print(f"[table6] {name} l={l}: P@20={p20:.3f} ERR@20={err:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

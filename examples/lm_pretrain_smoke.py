@@ -1,0 +1,19 @@
+"""Train an assigned LM architecture's smoke config end-to-end on synthetic
+tokens (the full configs are exercised by the multi-pod dry-run).
+
+Run: PYTHONPATH=src python examples/lm_pretrain_smoke.py --arch gemma3-4b
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--steps", type=int, default=60)
+    args, _ = ap.parse_known_args()
+    sys.argv = ["train", "--arch", args.arch, "--steps", str(args.steps),
+                "--batch", "8", "--ckpt-dir", f"results/lm_{args.arch}_ckpt",
+                "--eval-every", "20", "--ckpt-every", "30"]
+    train_main()

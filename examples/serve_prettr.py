@@ -1,0 +1,13 @@
+"""Serving example: build a PreTTR index then serve re-ranking traffic,
+reporting the Table-5-style phase breakdown (query / load / combine).
+
+Run: PYTHONPATH=src python examples/serve_prettr.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.argv = ["serve", "--l", "2", "--compress-dim", "16",
+                "--n-docs", "256", "--n-queries", "8", "--candidates", "64"]
+    serve_main()

@@ -1,0 +1,20 @@
+"""End-to-end driver: train a ~few-hundred-step PreTTR ranker with
+checkpointing + restart, validating every N steps (the paper's §5.3
+protocol), then index + serve and compare against the l=0 base model.
+
+Run: PYTHONPATH=src python examples/train_rerank_e2e.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args, _ = ap.parse_known_args()
+    sys.argv = ["train", "--arch", "prettr-bert", "--steps", str(args.steps),
+                "--l", "2", "--compress-dim", "16",
+                "--ckpt-dir", "results/e2e_ckpt", "--eval-every", "32",
+                "--ckpt-every", "50"]
+    train_main()

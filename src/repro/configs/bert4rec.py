@@ -1,0 +1,29 @@
+"""BERT4Rec [arXiv:1904.06690; paper].
+embed_dim=64 n_blocks=2 n_heads=2 seq_len=200 interaction=bidir-seq.
+Item vocab sized to the 1M-candidate retrieval cell."""
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, RECSYS_SHAPES
+from repro.models.recsys.bert4rec import Bert4RecConfig
+
+
+def full_config() -> Bert4RecConfig:
+    # n_items + 2 specials = 2^20: the item-vocab axis divides the 16-way
+    # model mesh axis exactly (vocab-sharded scoring, two-stage top-k)
+    return Bert4RecConfig(
+        name="bert4rec", n_items=1_048_574, seq_len=200, embed_dim=64,
+        n_blocks=2, n_heads=2, prettr_l=1, compute_dtype=jnp.bfloat16)
+
+
+def smoke_config() -> Bert4RecConfig:
+    return Bert4RecConfig(
+        name="bert4rec-smoke", n_items=500, seq_len=20, embed_dim=32,
+        n_blocks=2, n_heads=2, prettr_l=1, compute_dtype=jnp.float32)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="bert4rec", family="recsys", config=full_config(),
+        smoke=smoke_config(), shapes=RECSYS_SHAPES,
+        notes="PreTTR applies natively: history segment precomputed "
+              "offline via the split mask (prettr_l=1 of 2 layers).")

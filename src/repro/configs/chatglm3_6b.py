@@ -1,0 +1,32 @@
+"""ChatGLM3-6B [arXiv:2406.12793; hf].
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024 — RoPE 2d (half the
+head dim rotated), QKV bias."""
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.transformer import TransformerConfig
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="chatglm3-6b", n_layers=28, d_model=4096, n_heads=32,
+        n_kv_heads=2, head_dim=128, d_ff=13696, vocab_size=65024,
+        causal=True, rope_base=1e4, rope_fraction=0.5, qkv_bias=True,
+        norm="rmsnorm", gated_mlp=True, activation="silu",
+        compute_dtype=jnp.bfloat16, remat="block", remat_block=2,
+        block_kv=512, logits_chunk=512)
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="chatglm3-6b-smoke", n_layers=4, d_model=128, n_heads=8,
+        n_kv_heads=2, head_dim=16, d_ff=256, vocab_size=512, causal=True,
+        rope_fraction=0.5, qkv_bias=True, compute_dtype=jnp.float32,
+        remat_block=2, block_kv=32, logits_chunk=16)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="chatglm3-6b", family="lm", config=full_config(),
+        smoke=smoke_config(), shapes=LM_SHAPES, skip_shapes=("long_500k",),
+        notes="long_500k skipped: pure full attention (DESIGN.md §4).")

@@ -1,0 +1,32 @@
+"""Granite-3.0-3B-A800M MoE [hf:ibm-granite/granite-3.0-3b-a800m-base; hf].
+32L d_model=1536 24H (GQA kv=8) d_ff(expert)=512, MoE 40 experts top-8,
+vocab=49155, head_dim=64."""
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.transformer import TransformerConfig
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="granite-moe-3b-a800m", n_layers=32, d_model=1536, n_heads=24,
+        n_kv_heads=8, head_dim=64, d_ff=512, vocab_size=49155,
+        causal=True, rope_base=1e4, norm="rmsnorm", gated_mlp=True,
+        activation="silu", n_experts=40, top_k=8, capacity_factor=1.25,
+        compute_dtype=jnp.bfloat16, remat="block", remat_block=2,
+        block_kv=512, logits_chunk=512, tie_embeddings=True)
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="granite-moe-smoke", n_layers=4, d_model=48, n_heads=4,
+        n_kv_heads=2, head_dim=12, d_ff=32, vocab_size=512, causal=True,
+        n_experts=5, top_k=2, tie_embeddings=True, compute_dtype=jnp.float32,
+        remat_block=2, block_kv=16, logits_chunk=16)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="granite-moe-3b-a800m", family="lm", config=full_config(),
+        smoke=smoke_config(), shapes=LM_SHAPES, skip_shapes=("long_500k",),
+        notes="long_500k skipped: pure full attention (DESIGN.md §4).")

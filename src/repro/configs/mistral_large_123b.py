@@ -1,0 +1,31 @@
+"""Mistral-Large-Instruct-2407 (123B dense).
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768, head_dim=128."""
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.transformer import TransformerConfig
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="mistral-large-123b", n_layers=88, d_model=12288, n_heads=96,
+        n_kv_heads=8, head_dim=128, d_ff=28672, vocab_size=32768,
+        causal=True, rope_base=1e6, norm="rmsnorm", gated_mlp=True,
+        activation="silu", compute_dtype=jnp.bfloat16,
+        remat="block", remat_block=2, block_kv=512, logits_chunk=512)
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="mistral-large-123b-smoke", n_layers=4, d_model=128, n_heads=8,
+        n_kv_heads=2, head_dim=16, d_ff=256, vocab_size=512, causal=True,
+        rope_base=1e6, compute_dtype=jnp.float32, remat_block=2, block_kv=32,
+        logits_chunk=16)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="mistral-large-123b", family="lm", config=full_config(),
+        smoke=smoke_config(), shapes=LM_SHAPES, skip_shapes=("long_500k",),
+        notes="long_500k skipped: pure full attention (DESIGN.md §4).")

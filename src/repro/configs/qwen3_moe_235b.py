@@ -1,0 +1,32 @@
+"""Qwen3-235B-A22B MoE [hf:Qwen/Qwen3-235B-A22B; hf].
+94L d_model=4096 64H (GQA kv=4) d_ff(expert)=1536 vocab=151936,
+MoE 128 experts top-8, head_dim=128, QK-norm."""
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, LM_SHAPES
+from repro.models.transformer import TransformerConfig
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen3-moe-235b-a22b", n_layers=94, d_model=4096, n_heads=64,
+        n_kv_heads=4, head_dim=128, d_ff=1536, vocab_size=151936,
+        causal=True, rope_base=1e6, use_qk_norm=True, norm="rmsnorm",
+        gated_mlp=True, activation="silu", n_experts=128, top_k=8,
+        capacity_factor=1.25, compute_dtype=jnp.bfloat16,
+        remat="block", remat_block=2, block_kv=512, logits_chunk=256)
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen3-moe-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=32, vocab_size=512, causal=True,
+        use_qk_norm=True, n_experts=8, top_k=2, compute_dtype=jnp.float32,
+        remat_block=2, block_kv=16, logits_chunk=16)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="qwen3-moe-235b-a22b", family="lm", config=full_config(),
+        smoke=smoke_config(), shapes=LM_SHAPES, skip_shapes=("long_500k",),
+        notes="long_500k skipped: pure full attention (DESIGN.md §4).")

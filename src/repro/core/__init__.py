@@ -1,0 +1,31 @@
+"""PreTTR core: split-mask ranking encoder, precompute/join API, compression.
+
+This package is the paper's contribution (MacAvaney et al., SIGIR 2020):
+
+* :mod:`repro.core.prettr` — the PreTTR ranker: train-time split attention
+  mask, index-time document precomputation, query-time join with a CLS-only
+  final layer.
+* :mod:`repro.core.compression` — the learned d->e->d bottleneck stored in
+  the index, pre-trained with the attention-MSE distillation loss (Eq. 2).
+"""
+from repro.core.prettr import (
+    PreTTRConfig,
+    init_prettr,
+    rank_pairs_loss,
+    rank_forward,
+    precompute_docs,
+    encode_query,
+    join_and_score,
+)
+from repro.core.compression import (
+    init_compressor,
+    compress,
+    decompress,
+    attention_mse_loss,
+)
+
+__all__ = [
+    "PreTTRConfig", "init_prettr", "rank_pairs_loss", "rank_forward",
+    "precompute_docs", "encode_query", "join_and_score",
+    "init_compressor", "compress", "decompress", "attention_mse_loss",
+]

@@ -1,0 +1,147 @@
+"""PreTTR token-representation compression (paper §4.2).
+
+Compress:   r    = GELU(s_l @ W_comp + b_comp)            # d -> e
+Decompress: ŝ_l  = LayerNorm(r @ W_decomp + b_decomp)     # e -> d
+
+The paper trains these with an *attention-MSE* distillation loss (Eq. 2): run
+the unmodified network and the compressed network over the same input and
+minimize the MSE between their attention probability tensors in layers
+l+1..n.  The exact representations are free to drift — only the downstream
+attention behaviour is matched.  We then fine-tune jointly with the ranker.
+
+Adaptation note (DESIGN.md §3): the paper's "batch normalization" after
+decompression is implemented as LayerNorm — batch statistics are hostile to
+data-parallel serving and modern BERT implementations use LN in this slot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_compressor(key, d: int, e: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    params = {
+        "w_comp": L.dense_init(k1, d, e, dtype),
+        "b_comp": jnp.zeros((e,), dtype),
+        "w_decomp": L.dense_init(k2, e, d, dtype),
+        "b_decomp": jnp.zeros((d,), dtype),
+        "ln": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+    }
+    axes = {
+        "w_comp": ("embed", None),
+        "b_comp": (None,),
+        "w_decomp": (None, "embed"),
+        "b_decomp": ("embed",),
+        "ln": {"scale": ("embed",), "bias": ("embed",)},
+    }
+    return params, axes
+
+
+def compress(params: dict, s_l, *, store_dtype=jnp.float16):
+    """[..., d] -> [..., e] stored representation (fp16 by default —
+    the paper's 16-bit trick, §6.2)."""
+    r = jax.nn.gelu(s_l @ params["w_comp"].astype(s_l.dtype)
+                    + params["b_comp"].astype(s_l.dtype))
+    return r.astype(store_dtype)
+
+
+def decompress(params: dict, r, *, compute_dtype=jnp.bfloat16):
+    """[..., e] -> [..., d]; fuses the fp16 upcast with the expansion."""
+    r = r.astype(compute_dtype)
+    s_hat = r @ params["w_decomp"].astype(compute_dtype) \
+        + params["b_decomp"].astype(compute_dtype)
+    return L.layer_norm(s_hat, params["ln"]["scale"], params["ln"]["bias"])
+
+
+def roundtrip(params: dict, s_l, *, store_dtype=jnp.float16,
+              compute_dtype=jnp.bfloat16):
+    return decompress(params, compress(params, s_l, store_dtype=store_dtype),
+                      compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention-capture forward + Eq. (2) loss
+# ---------------------------------------------------------------------------
+
+
+def _attn_probs_one_layer(lp, x, cfg, *, positions, segs, valid, window):
+    """Plain-attention layer step that also returns attention probabilities
+    [B, H, S, S].  Used only for compressor (pre-)training — small models,
+    short sequences, so materializing probs is fine."""
+    import math
+
+    from repro.models.transformer import _layer_step  # noqa: F401 (doc link)
+
+    b, s, _ = x.shape
+    dh = cfg.dh
+    cd = cfg.compute_dtype
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    p = lp["attn"]
+    q = (h @ p["wq"].astype(cd)).reshape(b, s, cfg.n_heads, dh)
+    k = (h @ p["wk"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (h @ p["wv"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.rope:
+        q = L.rope(q, positions, base=cfg.rope_base, fraction=cfg.rope_fraction)
+        k = L.rope(k, positions, base=cfg.rope_base, fraction=cfg.rope_fraction)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kk, vv = L._repeat_kv(k, n_rep), L._repeat_kv(v, n_rep)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    mask = L.attention_mask(positions, positions, causal=cfg.causal,
+                            window=window, q_valid=valid, k_valid=valid)
+    logits = jnp.where(mask[:, None], logits, L.NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vv.dtype), vv)
+    out = out.reshape(b, s, cfg.n_heads * dh) @ p["wo"].astype(cd)
+    x = x + out
+    h2 = L.apply_norm(lp["ln2"], x, cfg.norm)
+    mlp_p = jax.tree.map(lambda a: a.astype(cd), lp["mlp"])
+    x = x + L.mlp(mlp_p, h2, gated=cfg.gated_mlp, activation=cfg.activation)
+    return x, probs
+
+
+def forward_capture_attention(params, cfg, x, lo: int, hi: int, *,
+                              positions, segs=None, valid=None):
+    """Run layers [lo, hi) unrolled with plain attention, returning
+    (x, probs [hi-lo, B, H, S, S])."""
+    windows = cfg.layer_windows()
+    probs = []
+    for i in range(lo, hi):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        x, pr = _attn_probs_one_layer(lp, x, cfg, positions=positions,
+                                      segs=segs, valid=valid,
+                                      window=windows[i])
+        probs.append(pr)
+    return x, jnp.stack(probs)
+
+
+def attention_mse_loss(params, comp_params, cfg, tokens, *, l: int,
+                       valid=None, store_dtype=jnp.float16):
+    """Paper Eq. (2): mean over layers l+1..n of MSE between the attention
+    probabilities of the compressed and uncompressed networks.
+
+    The transformer weights are treated as frozen teacher weights; only
+    ``comp_params`` receives gradients in the pre-training stage.
+    """
+    from repro.models import transformer as T
+
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x0 = T.embed(params, cfg, tokens, positions, None)
+    # shared trunk: layers [0, l)
+    x_l, _ = T.run_layer_range(params, cfg, x0, 0, l, positions=positions,
+                               valid=valid)
+    # teacher: straight through layers [l, n)
+    _, probs_t = forward_capture_attention(params, cfg, x_l, l, cfg.n_layers,
+                                           positions=positions, valid=valid)
+    # student: compress -> decompress, then layers [l, n)
+    x_hat = roundtrip(comp_params, x_l, store_dtype=store_dtype,
+                      compute_dtype=cfg.compute_dtype)
+    _, probs_s = forward_capture_attention(params, cfg, x_hat, l, cfg.n_layers,
+                                           positions=positions, valid=valid)
+    per_layer = jnp.mean(jnp.square(probs_s - jax.lax.stop_gradient(probs_t)),
+                         axis=(1, 2, 3, 4))
+    return jnp.mean(per_layer)

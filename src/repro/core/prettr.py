@@ -1,0 +1,242 @@
+"""PreTTR: Precomputing Transformer Term Representations (paper §4).
+
+Three phases, one parameter set:
+
+* **Train** — :func:`rank_forward` runs the joint ``[CLS];q;[SEP];d;[SEP]``
+  input with the split attention mask active in layers ``0..l`` (query and
+  document tokens cannot attend across segments), optionally round-tripping
+  the document reps through the compressor at the ``l`` boundary (fine-tune
+  stage).  :func:`rank_pairs_loss` is the paper's pairwise softmax loss.
+* **Index** — :func:`precompute_docs` pushes documents (alone) through layers
+  ``0..l`` and returns the (compressed, fp16) term representations that the
+  index stores.  Because of the split mask, these are bit-identical in
+  function to what the joint forward would have produced for the doc side.
+* **Query** — :func:`encode_query` runs the query through layers ``0..l``
+  once (reused for every candidate); :func:`join_and_score` concatenates the
+  query reps with the loaded doc reps, runs layers ``l..n-1`` jointly, and
+  finishes with a **CLS-only final layer** (paper §6.3: the ranking score
+  reads only [CLS], so the last layer computes a single attention row).
+
+Equivalence invariant (tested in tests/test_prettr.py): for any (q, d),
+``rank_forward == join_and_score(encode_query, precompute_docs)`` up to
+storage-dtype rounding.  This is the property that makes index-time
+precomputation *sound*, and it pins down every masking/position detail.
+
+Positions: the query segment is padded to ``max_query_len`` so document
+tokens always sit at positions ``max_query_len + i`` — index-time encoding
+must use the same positions the joint forward would (the paper pads queries
+for the same reason).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as C
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class PreTTRConfig:
+    backbone: T.TransformerConfig
+    l: int = 6                       # layers precomputed (paper's sweep 1..11)
+    max_query_len: int = 32          # [CLS] + query + [SEP], padded
+    max_doc_len: int = 224           # doc + trailing [SEP], padded
+    compress_dim: int = 0            # e; 0 disables compression
+    store_dtype: Any = jnp.float16   # paper's 16-bit storage trick
+    cls_only_last_layer: bool = True
+
+    def __post_init__(self):
+        # the backbone must be bidirectional with the split boundary at l
+        assert not self.backbone.causal, "PreTTR backbone is an encoder"
+        assert self.backbone.split_layers == self.l, \
+            "backbone.split_layers must equal PreTTRConfig.l"
+        assert 0 <= self.l < self.backbone.n_layers
+
+
+def make_backbone(n_layers=12, d_model=768, n_heads=12, d_ff=3072,
+                  vocab_size=30522, l=6, max_len=256, **kw) -> T.TransformerConfig:
+    """A Vanilla-BERT-style encoder (the paper's base model family)."""
+    return T.TransformerConfig(
+        name="prettr_bert", n_layers=n_layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=n_heads, d_ff=d_ff, vocab_size=vocab_size,
+        causal=False, rope=False, learned_pos=max_len, segment_vocab=2,
+        norm="layernorm", gated_mlp=False, activation="gelu", mlp_bias=True,
+        qkv_bias=True, split_layers=l, **kw)
+
+
+def init_prettr(key, cfg: PreTTRConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    bb, bb_ax = T.init_params(k1, cfg.backbone)
+    params = {"backbone": bb,
+              "score_head": L.dense_init(k2, cfg.backbone.d_model, 1,
+                                         cfg.backbone.param_dtype)}
+    axes = {"backbone": bb_ax, "score_head": ("embed", None)}
+    if cfg.compress_dim:
+        params["compressor"], axes["compressor"] = C.init_compressor(
+            k3, cfg.backbone.d_model, cfg.compress_dim,
+            cfg.backbone.param_dtype)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _score_from_cls(params, cfg: PreTTRConfig, cls_rep):
+    """cls_rep: [B, d] -> [B] ranking score (paper Eq. 1, W_combine)."""
+    h = L.apply_norm(params["backbone"]["final_norm"], cls_rep,
+                     cfg.backbone.norm)
+    return (h @ params["score_head"].astype(h.dtype))[..., 0].astype(jnp.float32)
+
+
+def _cls_only_layer(lp, x, cfg: T.TransformerConfig, *, positions, valid):
+    """Final transformer layer computing only the [CLS] (index 0) row of
+    attention — paper §6.3.  x: [B, S, d] -> cls rep [B, d]."""
+    import math
+
+    b, s, _ = x.shape
+    dh = cfg.dh
+    cd = cfg.compute_dtype
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    p = lp["attn"]
+    q = (h[:, :1] @ p["wq"].astype(cd)).reshape(b, 1, cfg.n_heads, dh)
+    k = (h @ p["wk"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (h @ p["wv"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd).reshape(cfg.n_heads, dh)
+        k = k + p["bk"].astype(cd).reshape(cfg.n_kv_heads, dh)
+        v = v + p["bv"].astype(cd).reshape(cfg.n_kv_heads, dh)
+    if cfg.rope:
+        q = L.rope(q, positions[:, :1], base=cfg.rope_base,
+                   fraction=cfg.rope_fraction)
+        k = L.rope(k, positions, base=cfg.rope_base, fraction=cfg.rope_fraction)
+    # bidirectional single-row attention over the full sequence
+    k_pos = positions
+    q_pos = jnp.full((b, 1), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+    out = L.decode_attention(q, k, v, scale=1.0 / math.sqrt(dh),
+                             k_pos=k_pos, q_pos=q_pos, window=-1,
+                             k_valid=valid)
+    out = out.reshape(b, 1, cfg.n_heads * dh) @ p["wo"].astype(cd)
+    x_cls = x[:, :1] + out
+    h2 = L.apply_norm(lp["ln2"], x_cls, cfg.norm)
+    mlp_p = jax.tree.map(lambda a: a.astype(cd), lp["mlp"])
+    x_cls = x_cls + L.mlp(mlp_p, h2, gated=cfg.gated_mlp,
+                          activation=cfg.activation)
+    return x_cls[:, 0]
+
+
+def _maybe_roundtrip_docs(params, cfg: PreTTRConfig, x, segs):
+    """Fine-tune-time compressor round-trip, applied to doc tokens only."""
+    if not cfg.compress_dim:
+        return x
+    x_hat = C.roundtrip(params["compressor"], x, store_dtype=cfg.store_dtype,
+                        compute_dtype=cfg.backbone.compute_dtype)
+    return jnp.where((segs == 1)[..., None], x_hat, x)
+
+
+# ---------------------------------------------------------------------------
+# Train-time joint forward
+# ---------------------------------------------------------------------------
+
+
+def rank_forward(params, cfg: PreTTRConfig, tokens, segs, valid):
+    """Joint [CLS];q;[SEP];d;[SEP] forward with the split mask in layers
+    0..l.  tokens/segs/valid: [B, S] with S = max_query_len + max_doc_len.
+    Returns scores [B]."""
+    bcfg = cfg.backbone
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = T.embed(params["backbone"], bcfg, tokens, positions, segs)
+    x, _ = T.run_layer_range(params["backbone"], bcfg, x, 0, cfg.l,
+                             positions=positions, segs=segs, valid=valid)
+    x = _maybe_roundtrip_docs(params, cfg, x, segs)
+    last = bcfg.n_layers - (1 if cfg.cls_only_last_layer else 0)
+    x, _ = T.run_layer_range(params["backbone"], bcfg, x, cfg.l, last,
+                             positions=positions, segs=segs, valid=valid)
+    if cfg.cls_only_last_layer:
+        lp = jax.tree.map(lambda a: a[-1], params["backbone"]["layers"])
+        cls = _cls_only_layer(lp, x, bcfg, positions=positions, valid=valid)
+    else:
+        cls = x[:, 0]
+    return _score_from_cls(params, cfg, cls)
+
+
+def rank_pairs_loss(params, cfg: PreTTRConfig, pos, neg):
+    """Paper §5.3 pairwise softmax loss.  pos/neg: dicts with
+    tokens/segs/valid [B, S]."""
+    s_pos = rank_forward(params, cfg, pos["tokens"], pos["segs"], pos["valid"])
+    s_neg = rank_forward(params, cfg, neg["tokens"], neg["segs"], neg["valid"])
+    return jnp.mean(jax.nn.softplus(-(s_pos - s_neg)))
+
+
+# ---------------------------------------------------------------------------
+# Index-time / query-time split execution
+# ---------------------------------------------------------------------------
+
+
+def precompute_docs(params, cfg: PreTTRConfig, doc_tokens, doc_valid):
+    """Index-time: [N, Ld] document tokens -> stored reps
+    [N, Ld, e or d] in ``store_dtype``.  Documents sit at positions
+    ``max_query_len + i`` — identical to their joint-forward positions."""
+    bcfg = cfg.backbone
+    n, ld = doc_tokens.shape
+    positions = jnp.broadcast_to(cfg.max_query_len + jnp.arange(ld), (n, ld))
+    segs = jnp.ones((n, ld), jnp.int32)
+    x = T.embed(params["backbone"], bcfg, doc_tokens, positions, segs)
+    # Split mask makes cross-segment attention impossible below l, so a
+    # doc-only input is exactly the doc side of the joint forward.
+    x, _ = T.run_layer_range(params["backbone"], bcfg, x, 0, cfg.l,
+                             positions=positions, segs=segs, valid=doc_valid)
+    if cfg.compress_dim:
+        return C.compress(params["compressor"], x, store_dtype=cfg.store_dtype)
+    return x.astype(cfg.store_dtype)
+
+
+def encode_query(params, cfg: PreTTRConfig, q_tokens, q_valid):
+    """Query-time: [B, Lq] -> query reps [B, Lq, d] through layers 0..l.
+    Computed once per query and reused across all candidate documents."""
+    bcfg = cfg.backbone
+    b, lq = q_tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(lq), (b, lq))
+    segs = jnp.zeros((b, lq), jnp.int32)
+    x = T.embed(params["backbone"], bcfg, q_tokens, positions, segs)
+    x, _ = T.run_layer_range(params["backbone"], bcfg, x, 0, cfg.l,
+                             positions=positions, segs=segs, valid=q_valid)
+    return x
+
+
+def join_and_score(params, cfg: PreTTRConfig, q_reps, q_valid, doc_store,
+                   doc_valid):
+    """Query-time join: q_reps [B, Lq, d] (+valid), doc_store [B, Ld, e|d]
+    (loaded from the index) -> scores [B].  Runs layers l..n-1 jointly and a
+    CLS-only final layer."""
+    bcfg = cfg.backbone
+    b, lq, _ = q_reps.shape
+    ld = doc_store.shape[1]
+    if cfg.compress_dim:
+        d_reps = C.decompress(params["compressor"], doc_store,
+                              compute_dtype=bcfg.compute_dtype)
+    else:
+        d_reps = doc_store.astype(bcfg.compute_dtype)
+    x = jnp.concatenate([q_reps.astype(bcfg.compute_dtype), d_reps], axis=1)
+    positions = jnp.broadcast_to(
+        jnp.concatenate([jnp.arange(lq), cfg.max_query_len + jnp.arange(ld)]),
+        (b, lq + ld))
+    segs = jnp.concatenate([jnp.zeros((b, lq), jnp.int32),
+                            jnp.ones((b, ld), jnp.int32)], axis=1)
+    valid = jnp.concatenate([q_valid, doc_valid], axis=1)
+    last = bcfg.n_layers - (1 if cfg.cls_only_last_layer else 0)
+    x, _ = T.run_layer_range(params["backbone"], bcfg, x, cfg.l, last,
+                             positions=positions, segs=segs, valid=valid)
+    if cfg.cls_only_last_layer:
+        lp = jax.tree.map(lambda a: a[-1], params["backbone"]["layers"])
+        cls = _cls_only_layer(lp, x, bcfg, positions=positions, valid=valid)
+    else:
+        cls = x[:, 0]
+    return _score_from_cls(params, cfg, cls)

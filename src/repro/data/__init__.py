@@ -1,0 +1,6 @@
+"""Host-side data pipeline: synthetic IR world, tokenizer, graph + recsys
+generators, samplers. All numpy, deterministic per seed."""
+from repro.data.synthetic_ir import SyntheticIRWorld
+from repro.data.tokenizer import HashTokenizer
+
+__all__ = ["SyntheticIRWorld", "HashTokenizer"]

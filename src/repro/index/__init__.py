@@ -1,0 +1,4 @@
+"""PreTTR term-representation index."""
+from repro.index.store import TermRepIndex
+
+__all__ = ["TermRepIndex"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+* ``split_attention`` — flash attention with the PreTTR split mask (plus
+  causal / sliding-window), block-skip on fully-masked tiles.
+* ``decode_attention`` — GQA flash-decode; also the paper's CLS-only
+  final-layer scorer (one query row against the full sequence).
+* ``fused_compress`` — the PreTTR compressor: GELU bottleneck (d->e) and the
+  fused fp16-upcast + expand + LayerNorm decompressor (e->d).
+* ``embedding_bag`` — recsys gather + segment-reduce via scalar-prefetch
+  index maps.
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper; interpret=True on CPU), ``ref.py`` (pure-jnp oracle
+the tests sweep against).
+"""

@@ -1,0 +1,36 @@
+"""Public wrapper for flash decode: standard [B, Hq, 1, D] layout in/out."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import flash_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def flash_decode_attention(q, k, v, lengths=None, *, window: int = -1,
+                           block_k: int = 256, interpret: bool | None = None):
+    """q: [B, Hq, 1, D]; k, v: [B, Hkv, S, D]; lengths: [B] (query position =
+    lengths-1).  Returns [B, Hq, 1, D]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, hq, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    bk = min(block_k, s)
+    pad = (-s) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qg = q[:, :, 0].reshape(b, hkv, n_rep, d)
+    out = flash_decode_pallas(qg, k, v, lengths.astype(jnp.int32),
+                              window=window, block_k=bk, interpret=interpret)
+    return out.reshape(b, hq, 1, d)

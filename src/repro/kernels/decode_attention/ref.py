@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths, *, window: int = -1):
+    """q: [B, Hq, 1, D]; k, v: [B, Hkv, S, D]; lengths: [B] -> [B, Hq, 1, D].
+    The query sits at position lengths-1 (last written cache slot)."""
+    b, hq, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    kk = jnp.repeat(k, n_rep, axis=1)
+    vv = jnp.repeat(v, n_rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(d)
+    k_pos = jnp.arange(s)
+    q_pos = (lengths - 1)[:, None, None, None]
+    mask = k_pos[None, None, None, :] < lengths[:, None, None, None]
+    if window > 0:
+        mask &= (q_pos - k_pos[None, None, None, :]) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)) \
+        .astype(q.dtype)

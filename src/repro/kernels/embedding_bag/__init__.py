@@ -1,0 +1,4 @@
+from repro.kernels.embedding_bag.ops import embedding_bag_pallas_op
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+__all__ = ["embedding_bag_pallas_op", "embedding_bag_ref"]

@@ -1,0 +1,64 @@
+"""EmbeddingBag gather-reduce — Pallas TPU kernel (recsys hot path).
+
+The ids drive *which table rows stream into VMEM*: they are scalar-prefetched
+and consumed by the K/V-style ``index_map``, so each grid step's DMA fetches
+exactly the needed row block (FBGEMM-TBE's row-gather, TPU-style — no
+one-hot matmul, no full-table pass).
+
+Layout: ids are host-packed to a dense ``[n_bags, max_nnz]`` (pad id 0 with
+a validity weight of 0).  Grid ``(n_bags, max_nnz)``; the inner axis
+accumulates one row per step into VMEM scratch and flushes at the last step.
+Row blocks are ``[1, dim]`` — fine for dim 128 (one lane tile); production
+would batch multiple rows per DMA, noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, weights_ref, table_row, o_ref, acc, *, mode: str):
+    j = pl.program_id(1)
+    nnz = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    b = pl.program_id(0)
+    w = weights_ref[b, j]
+    acc[...] += table_row[...].astype(jnp.float32) * w
+
+    @pl.when(j == nnz - 1)
+    def _finish():
+        out = acc[...]
+        if mode == "mean":
+            cnt = jnp.sum(weights_ref[b], axis=0)
+            out = out / jnp.maximum(cnt, 1.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def embedding_bag_pallas(table, ids, weights, *, mode: str, interpret: bool):
+    """table: [rows, dim]; ids: [n_bags, max_nnz] int32; weights:
+    [n_bags, max_nnz] f32 (0 = padding) -> [n_bags, dim]."""
+    n_bags, max_nnz = ids.shape
+    dim = table.shape[1]
+    kern = functools.partial(_bag_kernel, mode=mode)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n_bags, max_nnz),
+            in_specs=[
+                pl.BlockSpec((1, dim), lambda b, j, ids, w: (ids[b, j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, dim), lambda b, j, ids, w: (b, 0)),
+            scratch_shapes=[pltpu.VMEM((1, dim), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_bags, dim), table.dtype),
+        interpret=interpret,
+    )(ids, weights, table)

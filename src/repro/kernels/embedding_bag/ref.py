@@ -1,0 +1,13 @@
+"""Oracle: jnp.take + weighted sum (repro.models.recsys.embedding math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights, *, mode: str = "sum"):
+    """table: [rows, dim]; ids/weights: [n_bags, max_nnz] -> [n_bags, dim]."""
+    vecs = jnp.take(table, ids, axis=0).astype(jnp.float32)      # [B, N, D]
+    out = jnp.sum(vecs * weights[..., None], axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(jnp.sum(weights, axis=1, keepdims=True), 1.0)
+    return out.astype(table.dtype)

@@ -1,0 +1,55 @@
+"""Public wrappers: flatten leading dims, pad token tiles, pick interpret."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_compress.kernel import compress_pallas, decompress_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "block_t", "interpret"))
+def fused_compress(x, w, b, *, out_dtype=jnp.float16, block_t: int = 256,
+                   interpret: bool | None = None):
+    """x: [..., d] -> [..., e] (GELU bottleneck, fp16 store)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    t = 1
+    for s in lead:
+        t *= s
+    xf = x.reshape(t, d)
+    bt = min(block_t, max(8, t))
+    pad = (-t) % bt
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = compress_pallas(xf, w, b, out_dtype=out_dtype, block_t=bt,
+                          interpret=interpret)
+    return out[:t].reshape(*lead, w.shape[1])
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "block_t", "interpret"))
+def fused_decompress(r, w, b, gamma, beta, *, out_dtype=jnp.bfloat16,
+                     block_t: int = 256, interpret: bool | None = None):
+    """r: [..., e] fp16 -> [..., d] (upcast + expand + LayerNorm, one pass)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = r.shape[:-1]
+    e = r.shape[-1]
+    t = 1
+    for s in lead:
+        t *= s
+    rf = r.reshape(t, e)
+    bt = min(block_t, max(8, t))
+    pad = (-t) % bt
+    if pad:
+        rf = jnp.pad(rf, ((0, pad), (0, 0)))
+    out = decompress_pallas(rf, w, b, gamma, beta, out_dtype=out_dtype,
+                            block_t=bt, interpret=interpret)
+    return out[:t].reshape(*lead, w.shape[1])

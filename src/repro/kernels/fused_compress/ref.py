@@ -1,0 +1,20 @@
+"""Oracles: exactly repro.core.compression's math, unfused."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_ref(x, w, b, *, out_dtype=jnp.float16):
+    h = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    return jax.nn.gelu(h).astype(out_dtype)
+
+
+def decompress_ref(r, w, b, gamma, beta, *, out_dtype=jnp.float32,
+                   eps: float = 1e-6):
+    h = r.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * gamma.astype(jnp.float32) + beta.astype(jnp.float32)) \
+        .astype(out_dtype)

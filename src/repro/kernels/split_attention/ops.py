@@ -1,0 +1,47 @@
+"""Public wrapper: pad-to-block, pick interpret mode off-TPU, jit."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.split_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "seg_boundary", "block_q", "block_k", "interpret"))
+def split_flash_attention(q, k, v, lengths=None, *, causal: bool = False,
+                          window: int = -1, seg_boundary: int = -1,
+                          block_q: int = 128, block_k: int = 128,
+                          interpret: bool | None = None):
+    """Flash attention with PreTTR split / causal / sliding-window masks.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B] valid KV length
+    (defaults to Skv).  Pads sequence dims to block multiples; the pad tail
+    is masked via ``lengths`` and sliced off the output.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    if lengths is None:
+        lengths = jnp.full((b,), skv, jnp.int32)
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(8, skv))
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_pallas(q, k, v, lengths.astype(jnp.int32),
+                                 causal=causal, window=window,
+                                 seg_boundary=seg_boundary,
+                                 block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :, :sq]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the split-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def split_attention_ref(q, k, v, lengths, *, causal: bool = False,
+                        window: int = -1, seg_boundary: int = -1):
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B].
+    Returns [B, Hq, Sq, D]."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.broadcast_to(k_pos < lengths[:, None, None, None], s.shape)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    if seg_boundary >= 0:
+        mask &= (q_pos >= seg_boundary) == (k_pos >= seg_boundary)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)

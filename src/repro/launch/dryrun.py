@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")   # mute SPMD warning spam
+# ^ MUST precede any jax import: jax locks the device count at first init.
+#   512 host placeholder devices back the 16x16 single-pod and 2x16x16
+#   multi-pod production meshes for lowering/compilation (no allocation).
+
+"""Multi-pod dry-run: ``lower().compile()`` every (arch x shape x mesh) cell.
+
+Per cell we record:
+* ``memory_analysis()``  — per-device argument/output/temp/peak bytes (proves
+  the cell fits a 16GB v5e chip),
+* ``cost_analysis()``    — per-device HLO FLOPs / bytes accessed,
+* the collective-op operand bytes parsed from the post-SPMD HLO
+  (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute), split by op type,
+* the three roofline terms (§Roofline, EXPERIMENTS.md).
+
+Results land in ``results/dryrun/<arch>__<shape>__<mesh>.json`` and feed
+``benchmarks/roofline.py``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --shape train_4k --force
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link (~, per chip)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in post-SPMD HLO (per-device
+    shapes). Returns {op_kind: bytes, ..., "total": bytes}."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            idx = line.find(f" {kind}(")
+            if idx < 0:
+                idx = line.find(f"= {kind}(") - 1 if f"= {kind}(" in line else -1
+            if idx < 0:
+                continue
+            if f"{kind}-start" in line or f"{kind}-done" in line:
+                pass  # async pairs: count the -start (has operands)
+            operands = line[line.find(f"{kind}(") + len(kind) + 1:]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(operands):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = operands[:end]
+            for m in _SHAPE_RE.finditer(operands):
+                out[kind] += _shape_bytes(m.group(1), m.group(2))
+            break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    import jax
+
+    from repro.dist.sharding import default_rules
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = default_rules(mesh)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    cell = build_cell(arch, shape, rules)
+    with mesh:
+        lowered = jax.jit(cell.fn, donate_argnums=cell.donate) \
+            .lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        mem_info[attr] = getattr(mem, attr, None)
+    args_b = mem_info.get("argument_size_in_bytes") or 0
+    temp_b = mem_info.get("temp_size_in_bytes") or 0
+    out_b = mem_info.get("output_size_in_bytes") or 0
+    alias_b = mem_info.get("alias_size_in_bytes") or 0
+    peak_per_device = args_b + temp_b + out_b - alias_b
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    xla_flops_dev = float(cost.get("flops", 0.0))   # body-once (reference)
+
+    from repro.launch.hlo_analysis import analyze_hlo, \
+        f32_upcast_artifact_bytes
+    hlo_text = compiled.as_text()
+    hlo = analyze_hlo(hlo_text)                     # trip-count-scaled
+    upcast_artifact = f32_upcast_artifact_bytes(hlo_text)
+    flops_dev = hlo["flops"]
+    bytes_dev = hlo["hbm_bytes"]
+    coll = {**hlo["collective_bytes"],
+            "total": hlo["collective_bytes_total"],
+            "count": hlo["collective_count"]}
+
+    flops_global = flops_dev * n_dev
+    bytes_global = bytes_dev * n_dev
+    coll_global = coll["total"] * n_dev
+
+    terms = {
+        "compute_s": flops_global / (n_dev * PEAK_FLOPS),
+        "memory_s": bytes_global / (n_dev * HBM_BW),
+        "collective_s": coll_global / (n_dev * LINK_BW),
+    }
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    model_s = cell.model_flops / (n_dev * PEAK_FLOPS)
+
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "devices": n_dev,
+        "kind": cell.kind, "ok": True, "notes": cell.notes,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_info,
+        "peak_bytes_per_device": peak_per_device,
+        "cpu_bf16_upcast_artifact_bytes": upcast_artifact,
+        "hlo_flops_per_device": flops_dev,
+        "xla_cost_flops_per_device": xla_flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "hlo_flops_global": flops_global,
+        "model_flops": cell.model_flops,
+        "useful_compute_ratio": (cell.model_flops / flops_global
+                                 if flops_global else None),
+        "collective_bytes_per_device": coll,
+        "roofline": terms,
+        "dominant_term": dominant,
+        "roofline_step_s": bound_s,
+        "model_compute_s": model_s,
+        "roofline_fraction": (model_s / bound_s) if bound_s else None,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.steps import cell_names
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    cells = [(a, s) for a, s in cell_names()
+             if (args.arch is None or a == args.arch)
+             and (args.shape is None or s == args.shape)]
+
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh_kind}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {arch} {shape} {mesh_kind} (exists)")
+                continue
+            print(f"[dryrun] {arch} {shape} {mesh_kind} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mesh_kind)
+                n_ok += 1
+                print(f"  ok: peak/dev={rec['peak_bytes_per_device']/2**30:.2f}GiB "
+                      f"dominant={rec['dominant_term']} "
+                      f"roofline_frac={rec['roofline_fraction'] and round(rec['roofline_fraction'],3)} "
+                      f"compile={rec['compile_s']}s", flush=True)
+            except Exception as e:  # a failure here is a bug in our sharding
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                n_fail += 1
+                print(f"  FAIL: {type(e).__name__}: {str(e)[:300]}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

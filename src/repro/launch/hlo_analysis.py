@@ -1,0 +1,282 @@
+"""Post-optimization HLO analyzer with while-loop trip-count scaling.
+
+XLA's built-in ``HloCostAnalysis`` (``compiled.cost_analysis()``) counts a
+while-loop body **once**, which makes every scanned program (layer scans,
+KV-block scans, gradient accumulation) meaningless for rooflines.  This
+module walks the HLO text and scales by ``known_trip_count``:
+
+* **flops** — ``dot`` ops (2 * output_elems * contracted_elems); dots inside
+  fusions are traversed.  Convolutions are absent from this framework.
+* **hbm_bytes** — per top-level op: operand bytes + result bytes.  Fusions
+  count only their boundary (operands + root output), matching post-fusion
+  HBM traffic; tuple plumbing (gte/tuple/bitcast/parameter/constant) is free.
+* **collective_bytes** — operand bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (and their async -start
+  forms), by kind.
+
+All quantities are **per device** (the SPMD module is the per-device
+program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_OPERAND_REF = re.compile(r"%([\w\.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "add-dependency", "iota", "partition-id",
+             "replica-id", "opt-barrier"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(m.group(1), 4)
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list
+    attrs: str
+
+
+def _parse_op_line(line: str) -> Op | None:
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    if not line.startswith("%") or " = " not in line:
+        return None
+    name, rest = line.split(" = ", 1)
+    name = name.lstrip("%")
+    # result type: tuple "(...)" or single token
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        result_type = rest[: i + 1]
+        rest = rest[i + 1:].lstrip()
+    else:
+        sp = rest.index(" ")
+        result_type = rest[:sp]
+        rest = rest[sp + 1:]
+    # opcode
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    # operand section to matching close paren
+    depth = 0
+    end = par
+    for i in range(par, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operand_str = rest[par + 1: end]
+    attrs = rest[end + 1:]
+    operands = _OPERAND_REF.findall(operand_str)
+    return Op(name, result_type, opcode, operands, attrs)
+
+
+def parse_hlo(text: str) -> dict:
+    """-> {computation_name: {op_name: Op}} plus "__entry__" key."""
+    comps: dict = {}
+    current = None
+    entry = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped) and "=" not in stripped.split("(")[0]:
+            header = stripped
+            is_entry = header.startswith("ENTRY")
+            if is_entry:
+                header = header[len("ENTRY"):].strip()
+            cname = header.split(" ")[0].lstrip("%")
+            current = {}
+            comps[cname] = current
+            if is_entry:
+                entry = cname
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            op = _parse_op_line(stripped)
+            if op is not None:
+                current[op.name] = op
+    comps["__entry__"] = entry
+    return comps
+
+
+def _dot_flops(op: Op, symtab: dict) -> float:
+    out_elems = 1
+    for d in _first_shape_dims(op.result_type):
+        out_elems *= d
+    m = _LHS_C_RE.search(op.attrs)
+    contract = [int(x) for x in m.group(1).split(",") if x] if m else []
+    lhs = symtab.get(op.operands[0])
+    lhs_dims = _first_shape_dims(lhs.result_type) if lhs else []
+    c_elems = 1
+    for idx in contract:
+        if idx < len(lhs_dims):
+            c_elems *= lhs_dims[idx]
+    return 2.0 * out_elems * c_elems
+
+
+class HloAnalysis:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self.entry = self.comps.pop("__entry__")
+        self.flops = 0.0
+        self.hbm_bytes = 0.0
+        self.collective_bytes = defaultdict(float)
+        self.collective_count = defaultdict(int)
+        if self.entry:
+            self._walk(self.entry, 1.0, set())
+
+    # -- traversal ---------------------------------------------------------
+    def _walk(self, cname: str, mult: float, stack: frozenset | set):
+        comp = self.comps.get(cname)
+        if comp is None or cname in stack:
+            return
+        stack = set(stack) | {cname}
+        for op in comp.values():
+            oc = op.opcode
+            if oc == "while":
+                tm = _TRIP_RE.search(op.attrs)
+                trips = int(tm.group(1)) if tm else 1
+                bm = _BODY_RE.search(op.attrs)
+                if bm:
+                    self._walk(bm.group(1), mult * trips, stack)
+                continue
+            if oc in ("call", "async-start"):
+                cm = _CALLS_RE.search(op.attrs)
+                if cm:
+                    self._walk(cm.group(1), mult, stack)
+                continue
+            if oc == "fusion":
+                cm = _CALLS_RE.search(op.attrs)
+                if cm:
+                    self._count_fusion_flops(cm.group(1), mult, comp, op)
+                self._account_bytes(op, comp, mult)
+                continue
+            if oc == "conditional":
+                for cm in re.finditer(r"%([\w\.\-]+)", op.attrs):
+                    if cm.group(1) in self.comps:
+                        self._walk(cm.group(1), mult, stack)
+                continue
+            if oc == "dot":
+                self.flops += _dot_flops(op, comp) * mult
+                self._account_bytes(op, comp, mult)
+                continue
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in COLLECTIVES:
+                b = sum(_type_bytes(comp[o].result_type)
+                        for o in op.operands if o in comp)
+                self.collective_bytes[base] += b * mult
+                self.collective_count[base] += 1
+                self._account_bytes(op, comp, mult)
+                continue
+            if oc.endswith("-done") or oc in _FREE_OPS:
+                continue
+            self._account_bytes(op, comp, mult)
+
+    def _count_fusion_flops(self, cname: str, mult: float, caller, op):
+        comp = self.comps.get(cname)
+        if comp is None:
+            return
+        for o in comp.values():
+            if o.opcode == "dot":
+                self.flops += _dot_flops(o, comp) * mult
+            elif o.opcode == "fusion":
+                cm = _CALLS_RE.search(o.attrs)
+                if cm:
+                    self._count_fusion_flops(cm.group(1), mult, comp, o)
+
+    def _account_bytes(self, op: Op, comp, mult: float):
+        b = _type_bytes(op.result_type)
+        for o in op.operands:
+            src = comp.get(o)
+            if src is not None and src.opcode != "constant":
+                b += _type_bytes(src.result_type)
+        self.hbm_bytes += b * mult
+
+    # -- results ------------------------------------------------------------
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_bytes_total": float(sum(self.collective_bytes.values())),
+            "collective_count": dict(self.collective_count),
+        }
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloAnalysis(text).summary()
+
+
+_CONVERT_RE = re.compile(
+    r"%\S+ = f32\[([0-9,]+)\][^=]*? convert\(%(\S+?)\)")
+
+
+def f32_upcast_artifact_bytes(text: str, min_bytes: int = 2 ** 26) -> int:
+    """Total bytes of large f32 buffers produced by converting bf16 tensors.
+
+    The XLA *CPU* backend cannot consume bf16 dot operands natively and
+    materializes f32 copies; a TPU MXU reads bf16 directly.  These buffers
+    inflate ``memory_analysis()`` peaks on the CPU dry-run — this counts
+    them so EXPERIMENTS.md can report a TPU-corrected bound."""
+    comps = parse_hlo(text)
+    comps.pop("__entry__", None)
+    total = 0
+    for comp in comps.values():
+        for op in comp.values():
+            if op.opcode != "convert" or not op.result_type.startswith("f32"):
+                continue
+            src = comp.get(op.operands[0]) if op.operands else None
+            if src is None or not src.result_type.startswith("bf16"):
+                continue
+            b = _type_bytes(op.result_type)
+            if b >= min_bytes:
+                total += b
+    return total

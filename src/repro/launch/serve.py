@@ -1,0 +1,94 @@
+"""Serving driver: build a PreTTR index and serve re-ranking queries.
+
+Phases (paper Fig. 1):
+  1. index: precompute doc term reps through layers 0..l, compress, store.
+  2. serve: per query — encode once, load candidates, join, rank; report
+     per-phase latency (Table 5's Query / Decompress / Combine split).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def main() -> None:
+    from repro.configs.prettr_bert import smoke_config
+    from repro.core.prettr import init_prettr, precompute_docs
+    from repro.data.synthetic_ir import SyntheticIRWorld, precision_at_k
+    from repro.index import TermRepIndex
+    from repro.serving import Reranker
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--l", type=int, default=2)
+    ap.add_argument("--compress-dim", type=int, default=16)
+    ap.add_argument("--n-docs", type=int, default=512)
+    ap.add_argument("--n-queries", type=int, default=16)
+    ap.add_argument("--candidates", type=int, default=64)
+    ap.add_argument("--micro-batch", type=int, default=32)
+    ap.add_argument("--index-dir", default="results/prettr_index")
+    ap.add_argument("--index-batch", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = smoke_config(l=args.l, compress_dim=args.compress_dim)
+    world = SyntheticIRWorld(n_docs=args.n_docs, n_queries=args.n_queries,
+                             vocab_size=cfg.backbone.vocab_size,
+                             doc_len=cfg.max_doc_len - 2, seed=0)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+
+    # ---- phase 1: index ----------------------------------------------------
+    e = cfg.compress_dim or cfg.backbone.d_model
+    idx = TermRepIndex(args.index_dir, rep_dim=e, dtype="float16", l=cfg.l,
+                       compressed=bool(cfg.compress_dim),
+                       max_doc_len=cfg.max_doc_len)
+    t0 = time.time()
+    precompute = jax.jit(lambda p, d, v: precompute_docs(p, cfg, d, v))
+    for lo in range(0, world.n_docs, args.index_batch):
+        chunk = world.docs[lo: lo + args.index_batch]
+        docs = np.zeros((len(chunk), cfg.max_doc_len), np.int32)
+        lengths = []
+        for i, d in enumerate(chunk):
+            packed = np.concatenate([d[: cfg.max_doc_len - 1], [2]])
+            docs[i, : len(packed)] = packed
+            lengths.append(len(packed))
+        valid = np.arange(cfg.max_doc_len)[None] < np.asarray(lengths)[:, None]
+        reps = precompute(params, jnp.asarray(docs), jnp.asarray(valid))
+        idx.add_docs(np.asarray(reps), lengths)
+    idx.finalize()
+    t_index = time.time() - t0
+    idx = TermRepIndex.open(args.index_dir)
+    print(f"[index] {len(idx)} docs in {t_index:.1f}s, "
+          f"{idx.storage_bytes()/2**20:.1f} MiB "
+          f"(e={e}, fp16; raw d={cfg.backbone.d_model} fp32 would be "
+          f"{idx.storage_bytes() * cfg.backbone.d_model * 2 / max(e,1) / 2**20:.1f} MiB)")
+
+    # ---- phase 2: serve -----------------------------------------------------
+    rr = Reranker(params, cfg, idx, micro_batch=args.micro_batch)
+    lat, p20 = [], []
+    for qi in range(world.n_queries):
+        cands = list(world.candidates(qi, k=args.candidates))
+        q = np.zeros(cfg.max_query_len, np.int32)
+        packed = np.concatenate([[1], world.queries[qi], [2]])[
+            : cfg.max_query_len]
+        q[: len(packed)] = packed
+        qv = np.arange(cfg.max_query_len) < len(packed)
+        ranked, scores, stats = rr.rerank(q, qv, cands)
+        lat.append(stats)
+        p20.append(precision_at_k(world.qrels[qi][np.asarray(ranked)], 20))
+    # drop the jit-warmup query from latency stats
+    lat = lat[1:] if len(lat) > 1 else lat
+    qenc = np.mean([s.query_encode_s for s in lat])
+    load = np.mean([s.load_s for s in lat])
+    comb = np.mean([s.combine_s for s in lat])
+    print(f"[serve] {len(lat)} queries x {args.candidates} candidates | "
+          f"query={qenc*1e3:.1f}ms load={load*1e3:.1f}ms "
+          f"combine={comb*1e3:.1f}ms total={(qenc+load+comb)*1e3:.1f}ms | "
+          f"P@20={np.mean(p20):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,597 @@
+"""Cell builders: one (architecture x input-shape) cell = a step function +
+fully-sharded input specs, ready for ``jit(...).lower().compile()``.
+
+Every cell reports an analytic ``model_flops`` (6*N*D train / 2*N*D inference
+for LMs, per-op counts elsewhere) so the roofline harness can compute the
+useful-compute ratio against HLO FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding
+
+from repro.configs import ArchSpec, get_arch
+from repro.dist.context import install_rules
+from repro.dist.sharding import ShardingRules, divisible_spec
+from repro.optim.adam import OptimizerConfig, adam_update, init_opt_state, \
+    opt_state_axes
+
+
+# ---------------------------------------------------------------------------
+# Spec plumbing
+# ---------------------------------------------------------------------------
+
+
+def _is_ax(x):
+    return isinstance(x, tuple)
+
+
+def attach_shardings(shapes_tree, axes_tree, rules: ShardingRules):
+    """shapes_tree: pytree of ShapeDtypeStruct; axes_tree: same structure
+    with logical-axis tuples as leaves -> specs with NamedShardings."""
+    ax_leaves = jax.tree.flatten(axes_tree, is_leaf=_is_ax)[0]
+    sh_leaves, treedef = jax.tree.flatten(shapes_tree)
+    assert len(ax_leaves) == len(sh_leaves), (len(ax_leaves), len(sh_leaves))
+    out = []
+    for s, a in zip(sh_leaves, ax_leaves):
+        spec = divisible_spec(rules, a, s.shape)
+        out.append(jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(rules.mesh, spec)))
+    return treedef.unflatten(out)
+
+
+def sds(shape, dtype, rules: ShardingRules, axes):
+    spec = divisible_spec(rules, axes, shape)
+    return jax.ShapeDtypeStruct(tuple(shape), dtype,
+                                sharding=NamedSharding(rules.mesh, spec))
+
+
+def eval_params(init_fn):
+    """init_fn(key) -> (params, axes); returns (shape_tree, axes_tree)
+    without allocating."""
+    box = {}
+
+    def only_p(key):
+        p, ax = init_fn(key)
+        box["ax"] = ax
+        return p
+
+    shapes = jax.eval_shape(only_p, jax.random.PRNGKey(0))
+    return shapes, box["ax"]
+
+
+def state_specs(init_fn, opt_cfg: OptimizerConfig, rules: ShardingRules):
+    """Sharded ShapeDtypeStructs for {"params", "opt"}."""
+    p_shapes, p_axes = eval_params(init_fn)
+    o_shapes = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), p_shapes)
+    o_axes = opt_state_axes(p_axes, opt_cfg)
+    return {
+        "params": attach_shardings(p_shapes, p_axes, rules),
+        "opt": attach_shardings(o_shapes, o_axes, rules),
+    }
+
+
+def _pad_mult(n: int, m: int = 256) -> int:
+    return -(-n // m) * m
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable                 # fn(*args)
+    args: tuple                  # pytrees of sharded ShapeDtypeStructs
+    model_flops: float           # analytic useful FLOPs per call
+    notes: str = ""
+    donate: tuple = ()           # donated arg indices (state / KV cache)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_opt_cfg(cfg) -> OptimizerConfig:
+    big = cfg.num_params() > 20e9
+    return OptimizerConfig(m_dtype=jnp.bfloat16 if big else jnp.float32,
+                           keep_master=False)
+
+
+def _lm_accum(arch: str) -> int:
+    return {"mistral-large-123b": 4, "qwen3-moe-235b-a22b": 4,
+            "granite-moe-3b-a800m": 2}.get(arch, 1)
+
+
+def make_lm_train_step(cfg, opt_cfg: OptimizerConfig, accum: int,
+                       rules: ShardingRules, param_shardings=None):
+    from repro.models.transformer import causal_lm_loss
+
+    def _shard_like_params(tree):
+        # §Perf: without this constraint the fp32 grad accumulator is
+        # unsharded — XLA materializes and ALL-REDUCES full-size grads per
+        # microbatch (2.4TB/device measured at mistral-123B scale)
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            param_shardings)
+
+    def train_step(state, batch):
+        with install_rules(rules):
+            def loss_fn(p, mb):
+                return causal_lm_loss(p, cfg, mb["tokens"], mb["labels"])
+
+            if accum <= 1:
+                loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+            else:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:]), batch)
+
+                def acc(carry, mb):
+                    gsum, lsum = carry
+                    l, g = jax.value_and_grad(loss_fn)(state["params"], mb)
+                    gsum = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                    return (_shard_like_params(gsum), lsum + l), None
+
+                g0 = _shard_like_params(
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state["params"]))
+                (grads, loss), _ = lax.scan(acc, (g0, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss / accum
+            params, opt, gn = adam_update(grads, state["opt"], state["params"],
+                                          opt_cfg, lr=opt_cfg.lr)
+            return {"params": params, "opt": opt}, \
+                {"loss": loss, "grad_norm": gn}
+
+    return train_step
+
+
+def make_lm_cell(spec: ArchSpec, shape_name: str, rules: ShardingRules) -> Cell:
+    from repro.models import transformer as T
+
+    info = spec.shapes[shape_name]
+    cfg = spec.config
+    seq, gb = info["seq_len"], info["global_batch"]
+    n, n_act = cfg.num_params(), cfg.num_active_params()
+
+    if info["kind"] == "train":
+        opt_cfg = _lm_opt_cfg(cfg)
+        accum = _lm_accum(spec.name)
+        st = state_specs(lambda k: T.init_params(k, cfg), opt_cfg, rules)
+        batch = {
+            "tokens": sds((gb, seq), jnp.int32, rules, ("batch", None)),
+            "labels": sds((gb, seq), jnp.int32, rules, ("batch", None)),
+        }
+        param_shardings = jax.tree.map(lambda s: s.sharding, st["params"])
+        fn = make_lm_train_step(cfg, opt_cfg, accum, rules, param_shardings)
+        return Cell(spec.name, shape_name, "train", fn, (st, batch),
+                    model_flops=6.0 * n_act * gb * seq,
+                    notes=f"grad_accum={accum}", donate=(0,))
+
+    # (§Perf, refuted): TP-resident weights for <20B inference cut the FSDP
+    # all-gathers but *raised* the memory term 30-40% (each chip streams
+    # 16x more weight bytes per decode step) — FSDP sharding retained.
+    icfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+    p_shapes, p_axes = eval_params(lambda k: T.init_params(k, icfg))
+    params = attach_shardings(p_shapes, p_axes, rules)
+
+    if info["kind"] == "prefill":
+        def prefill_step(params, tokens):
+            with install_rules(rules):
+                hidden, kv, _ = T.forward(params, icfg, tokens,
+                                          collect_cache=True)
+                from repro.dist.context import maybe_shard
+                kv = jax.tree.map(
+                    lambda a: maybe_shard(
+                        a, ("layers", "batch", "kv_seq", None, None)), kv)
+                lg = T.logits(params, icfg, hidden[:, -1:])
+            return lg, kv
+
+        tokens = sds((gb, seq), jnp.int32, rules, ("batch", None))
+        return Cell(spec.name, shape_name, "prefill", prefill_step,
+                    (params, tokens), model_flops=2.0 * n_act * gb * seq)
+
+    # decode: one new token against a seq_len KV cache
+    def serve_step(params, tokens, cache, pos):
+        with install_rules(rules):
+            return T.decode_step(params, icfg, tokens, cache, pos)
+
+    cache_shape = (cfg.n_layers, gb, seq, cfg.n_kv_heads, cfg.dh)
+    cache_ax = ("layers", "batch", "kv_seq", None, None)
+    cache = (sds(cache_shape, jnp.bfloat16, rules, cache_ax),
+             sds(cache_shape, jnp.bfloat16, rules, cache_ax))
+    tokens = sds((gb, 1), jnp.int32, rules, ("batch", None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    # useful decode FLOPs: params matmuls + attention against the cache
+    attn_flops = 4.0 * gb * seq * cfg.n_heads * cfg.dh
+    return Cell(spec.name, shape_name, "decode", serve_step,
+                (params, tokens, cache, pos),
+                model_flops=2.0 * n_act * gb + attn_flops, donate=(2,))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells (DimeNet)
+# ---------------------------------------------------------------------------
+
+FANOUT_CAP = 8
+
+
+def _dimenet_flops(cfg, n_edges: int, n_trip: int, n_nodes: int,
+                   d_feat: int) -> float:
+    d, nb, nsr = cfg.d_hidden, cfg.n_bilinear, cfg.n_spherical * cfg.n_radial
+    per_block = (2 * n_edges * d * d * 2          # w_src + update in
+                 + 2 * n_trip * d * nb            # w_down gather matmul
+                 + 2 * n_trip * nsr * nb          # sbf gating
+                 + 2 * n_edges * nb * d           # w_up
+                 + 2 * n_edges * 2 * d * d)       # update MLP
+    embed = 2 * n_nodes * max(d_feat, 1) * d + 2 * n_edges * 3 * d * d
+    return float(cfg.n_blocks * per_block + embed)
+
+
+def make_gnn_cell(spec: ArchSpec, shape_name: str, rules: ShardingRules) -> Cell:
+    from repro.models.gnn import dimenet as D
+
+    info = spec.shapes[shape_name]
+    kind = info["kind"]
+    if kind == "graph_sampled":
+        bn = info["batch_nodes"]
+        f1, f2 = info["fanout"]
+        n_nodes = bn * (1 + f1 + f1 * f2)
+        n_edges = bn * (f1 + f1 * f2)
+        d_feat, n_classes = 602, 41          # Reddit-like
+        task = "node_cls"
+        n_graphs = 0
+    elif kind == "graph_energy":
+        bsz = info["batch"]
+        n_nodes = info["n_nodes"] * bsz
+        n_edges = info["n_edges"] * bsz
+        d_feat, n_classes = 0, 1
+        task = "energy"
+        n_graphs = bsz
+    else:
+        n_nodes, n_edges = info["n_nodes"], info["n_edges"]
+        d_feat = info.get("d_feat", 0)
+        n_classes = 47 if shape_name == "ogb_products" else 16
+        task = "node_cls"
+        n_graphs = 0
+
+    n_edges_p = _pad_mult(n_edges)
+    n_trip = n_edges_p * FANOUT_CAP
+    # bf16 messages for the web-scale graphs (f32 for molecular energies)
+    cd = jnp.bfloat16 if n_edges_p > 1_000_000 else jnp.float32
+    cfg = dataclasses.replace(spec.config, d_feat=d_feat,
+                              n_classes=n_classes, task=task,
+                              compute_dtype=cd)
+
+    batch = {
+        "node_feat": (sds((n_nodes, d_feat), jnp.float32, rules,
+                          ("table_rows", None)) if d_feat else
+                      sds((n_nodes,), jnp.int32, rules, (None,))),
+        "positions": sds((n_nodes, 3), jnp.float32, rules, (None, None)),
+        "edge_src": sds((n_edges_p,), jnp.int32, rules, ("edges",)),
+        "edge_dst": sds((n_edges_p,), jnp.int32, rules, ("edges",)),
+        "edge_valid": sds((n_edges_p,), jnp.bool_, rules, ("edges",)),
+        "trip_kj": sds((n_trip,), jnp.int32, rules, ("edges",)),
+        "trip_ji": sds((n_trip,), jnp.int32, rules, ("edges",)),
+        "trip_valid": sds((n_trip,), jnp.bool_, rules, ("edges",)),
+    }
+    if task == "energy":
+        batch["graph_ids"] = sds((n_nodes,), jnp.int32, rules, (None,))
+        batch["labels"] = sds((n_graphs,), jnp.float32, rules, (None,))
+        loss_fn = D.energy_loss
+    else:
+        batch["labels"] = sds((n_nodes,), jnp.int32, rules, (None,))
+        loss_fn = D.node_cls_loss
+
+    opt_cfg = OptimizerConfig()
+    st = state_specs(lambda k: D.init_dimenet(k, cfg), opt_cfg, rules)
+
+    def train_step(state, batch):
+        with install_rules(rules):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch))(state["params"])
+            params, opt, gn = adam_update(grads, state["opt"],
+                                          state["params"], opt_cfg,
+                                          lr=opt_cfg.lr)
+        return {"params": params, "opt": opt}, {"loss": loss, "grad_norm": gn}
+
+    return Cell(spec.name, shape_name, kind, train_step, (st, batch),
+                model_flops=3 * _dimenet_flops(cfg, n_edges_p, n_trip,
+                                               n_nodes, d_feat),
+                notes=f"nodes={n_nodes} edges={n_edges_p} trip={n_trip}",
+                donate=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+
+def _mlp_flops(dims, batch):
+    return float(sum(2 * batch * a * b for a, b in zip(dims[:-1], dims[1:])))
+
+
+def make_recsys_cell(spec: ArchSpec, shape_name: str,
+                     rules: ShardingRules) -> Cell:
+    info = spec.shapes[shape_name]
+    kind = info["kind"]
+    b = info["batch"]
+    name = spec.name
+    cfg = spec.config
+    opt_cfg = OptimizerConfig()
+
+    if name == "dlrm-mlperf":
+        from repro.models.recsys import dlrm as M
+        init = lambda k: M.init_dlrm(k, cfg)
+        n_vec = cfg.n_sparse + 1
+        flops_fwd = (_mlp_flops((cfg.n_dense, *cfg.bot_mlp), b)
+                     + 2 * b * n_vec * n_vec * cfg.embed_dim
+                     + _mlp_flops((n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1],
+                                   *cfg.top_mlp), b))
+        batch = {
+            "dense": sds((b, cfg.n_dense), jnp.float32, rules, ("batch", None)),
+            "sparse": sds((b, cfg.n_sparse), jnp.int32, rules, ("batch", None)),
+            "labels": sds((b,), jnp.float32, rules, ("batch",)),
+        }
+        loss_fn = M.bce_loss
+        fwd = lambda p, bt: M.dlrm_forward(p, cfg, bt["dense"], bt["sparse"])
+        if kind == "rec_retrieval":
+            nc = _pad_mult(info["n_candidates"])   # row-shardable candidates
+            item_vecs = sds((nc, cfg.embed_dim), jnp.float32, rules,
+                            ("table_rows", None))
+            bt_specs = {"dense": sds((b, cfg.n_dense), jnp.float32, rules,
+                                     ("batch", None)),
+                        "user": sds((b, cfg.n_sparse - len(cfg.item_fields)),
+                                    jnp.int32, rules, ("batch", None))}
+            p_shapes, p_axes = eval_params(init)
+            params = attach_shardings(p_shapes, p_axes, rules)
+
+            def retrieval(params, bt, iv):
+                with install_rules(rules):
+                    return M.retrieval_scores(params, cfg, bt["dense"],
+                                              bt["user"], iv)
+
+            return Cell(name, shape_name, kind, retrieval,
+                        (params, bt_specs, item_vecs),
+                        model_flops=2.0 * b * nc * cfg.embed_dim
+                        + _mlp_flops((cfg.n_dense, *cfg.bot_mlp), b))
+
+    elif name in ("deepfm", "xdeepfm"):
+        from repro.models.recsys import deepfm as M
+        init = lambda k: M.init_deepfm(k, cfg)
+        flops_fwd = (_mlp_flops((cfg.n_fields * cfg.embed_dim, *cfg.mlp, 1), b)
+                     + 2 * b * cfg.n_fields * cfg.embed_dim)
+        if cfg.interaction == "cin":
+            h_prev = cfg.n_fields
+            for h in cfg.cin_layers:
+                flops_fwd += 2 * b * h_prev * cfg.n_fields * cfg.embed_dim * h
+                h_prev = h
+        batch = {
+            "sparse": sds((b, cfg.n_fields), jnp.int32, rules, ("batch", None)),
+            "labels": sds((b,), jnp.float32, rules, ("batch",)),
+        }
+        loss_fn = M.bce_loss
+        fwd = lambda p, bt: M.deepfm_forward(p, cfg, bt["sparse"])
+        if kind == "rec_retrieval":
+            nc = _pad_mult(info["n_candidates"])
+            n_user = cfg.n_fields - len(cfg.item_fields)
+            p_shapes, p_axes = eval_params(init)
+            params = attach_shardings(p_shapes, p_axes, rules)
+            args = (sds((b, n_user), jnp.int32, rules, ("batch", None)),
+                    sds((nc, cfg.embed_dim), jnp.float32, rules,
+                        ("table_rows", None)),
+                    sds((nc,), jnp.float32, rules, ("table_rows",)))
+
+            def retrieval(params, uids, ivecs, ifirst):
+                with install_rules(rules):
+                    return M.retrieval_scores(params, cfg, uids, ivecs, ifirst)
+
+            return Cell(name, shape_name, kind, retrieval, (params, *args),
+                        model_flops=2.0 * b * nc * cfg.embed_dim)
+
+    else:  # bert4rec
+        from repro.models.recsys import bert4rec as M
+        init = lambda k: M.init_bert4rec(k, cfg)
+        bcfg = cfg.backbone()
+        tok = b * cfg.seq_len
+        # matmul params only: the (tied) item-embedding table is a lookup,
+        # not a matmul — at 1M items it would dominate 2*N*D spuriously
+        n_matmul = bcfg.num_params() - bcfg.vocab_size * bcfg.d_model \
+            - bcfg.learned_pos * bcfg.d_model
+        flops_fwd = 2.0 * n_matmul * tok
+        if kind == "rec_train":
+            st = state_specs(init, opt_cfg, rules)
+            batch = {
+                "item_seq": sds((b, cfg.seq_len), jnp.int32, rules,
+                                ("batch", None)),
+                "valid": sds((b, cfg.seq_len), jnp.bool_, rules,
+                             ("batch", None)),
+                "targets": sds((b, cfg.seq_len), jnp.int32, rules,
+                               ("batch", None)),
+            }
+
+            def train_step(state, batch):
+                with install_rules(rules):
+                    loss, grads = jax.value_and_grad(
+                        lambda p: M.cloze_loss(p, cfg, batch))(state["params"])
+                    params, opt, gn = adam_update(
+                        grads, state["opt"], state["params"], opt_cfg,
+                        lr=opt_cfg.lr)
+                return ({"params": params, "opt": opt},
+                        {"loss": loss, "grad_norm": gn})
+
+            # Cloze head: 32 masked positions x V-item softmax matmul is the
+            # dominant useful compute at a 2^20 item vocab
+            head_flops = 2.0 * b * 32 * bcfg.d_model * bcfg.vocab_size
+            return Cell(name, shape_name, kind, train_step, (st, batch),
+                        model_flops=3 * (flops_fwd + head_flops), donate=(0,))
+
+        p_shapes, p_axes = eval_params(init)
+        params = attach_shardings(p_shapes, p_axes, rules)
+        batch = (sds((b, cfg.seq_len), jnp.int32, rules, ("batch", None)),
+                 sds((b, cfg.seq_len), jnp.bool_, rules, ("batch", None)))
+
+        def serve(params, seq, valid):
+            with install_rules(rules):
+                # chunk=1024 bounds the [chunk, V] f32 score transient when
+                # GSPMD gathers it for stage-1 top-k (~4GiB at V=2^20)
+                return M.serve_topk(params, cfg, seq, valid,
+                                    batch_chunk=min(1024, b))
+
+        return Cell(name, shape_name, kind, serve, (params, *batch),
+                    model_flops=flops_fwd
+                    + 2.0 * b * (cfg.n_items + 2) * cfg.embed_dim)
+
+    # shared train / serve paths for dlrm & deepfm family
+    if kind == "rec_train":
+        st = state_specs(init, opt_cfg, rules)
+
+        def train_step(state, batch):
+            with install_rules(rules):
+                loss, grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, batch))(state["params"])
+                params, opt, gn = adam_update(grads, state["opt"],
+                                              state["params"], opt_cfg,
+                                              lr=opt_cfg.lr)
+            return {"params": params, "opt": opt}, \
+                {"loss": loss, "grad_norm": gn}
+
+        return Cell(name, shape_name, kind, train_step, (st, batch),
+                    model_flops=3 * flops_fwd, donate=(0,))
+
+    p_shapes, p_axes = eval_params(init)
+    params = attach_shardings(p_shapes, p_axes, rules)
+    del batch["labels"]
+
+    def serve(params, batch):
+        with install_rules(rules):
+            return fwd(params, batch)
+
+    return Cell(name, shape_name, kind, serve, (params, batch),
+                model_flops=flops_fwd)
+
+
+# ---------------------------------------------------------------------------
+# PreTTR cells (the paper's own model)
+# ---------------------------------------------------------------------------
+
+PRETTR_SHAPES = {
+    "rank_train":  {"kind": "prettr_train", "global_batch": 256},
+    "index_docs":  {"kind": "prettr_index", "batch": 4096},
+    "serve_join":  {"kind": "prettr_serve", "batch": 2048},
+}
+
+
+def make_prettr_cell(spec: ArchSpec, shape_name: str,
+                     rules: ShardingRules) -> Cell:
+    from repro.core import prettr as P
+    from repro.dist.sharding import replicated_serving_rules
+
+    cfg = spec.config
+    bcfg = cfg.backbone
+    info = PRETTR_SHAPES[shape_name]
+    # §Perf: index/serve shard the batch over all axes with replicated
+    # 110M-param weights — TP only added collectives at this size
+    if shape_name in ("index_docs", "serve_join"):
+        rules = replicated_serving_rules(rules.mesh)
+    s = cfg.max_query_len + cfg.max_doc_len
+    n = bcfg.num_params()
+    opt_cfg = OptimizerConfig()
+    init = lambda k: P.init_prettr(k, cfg)
+
+    if info["kind"] == "prettr_train":
+        gb = info["global_batch"]
+        st = state_specs(init, opt_cfg, rules)
+        pair = {
+            "tokens": sds((gb, s), jnp.int32, rules, ("batch", None)),
+            "segs": sds((gb, s), jnp.int32, rules, ("batch", None)),
+            "valid": sds((gb, s), jnp.bool_, rules, ("batch", None)),
+        }
+
+        def train_step(state, pos, neg):
+            with install_rules(rules):
+                loss, grads = jax.value_and_grad(
+                    lambda p: P.rank_pairs_loss(p, cfg, pos, neg))(
+                        state["params"])
+                params, opt, gn = adam_update(grads, state["opt"],
+                                              state["params"], opt_cfg,
+                                              lr=opt_cfg.lr)
+            return {"params": params, "opt": opt}, \
+                {"loss": loss, "grad_norm": gn}
+
+        return Cell(spec.name, shape_name, info["kind"], train_step,
+                    (st, pair, pair), model_flops=2 * 3 * 2.0 * n * gb * s,
+                    donate=(0,))
+
+    p_shapes, p_axes = eval_params(init)
+    params = attach_shardings(p_shapes, p_axes, rules)
+    b = info["batch"]
+
+    if info["kind"] == "prettr_index":
+        def index_step(params, docs, valid):
+            with install_rules(rules):
+                return P.precompute_docs(params, cfg, docs, valid)
+
+        args = (sds((b, cfg.max_doc_len), jnp.int32, rules, ("batch", None)),
+                sds((b, cfg.max_doc_len), jnp.bool_, rules, ("batch", None)))
+        frac = cfg.l / bcfg.n_layers
+        return Cell(spec.name, shape_name, info["kind"], index_step,
+                    (params, *args),
+                    model_flops=2.0 * n * frac * b * cfg.max_doc_len)
+
+    def join_step(params, q_reps, q_valid, store, d_valid):
+        with install_rules(rules):
+            return P.join_and_score(params, cfg, q_reps, q_valid, store,
+                                    d_valid)
+
+    e = cfg.compress_dim or bcfg.d_model
+    args = (sds((b, cfg.max_query_len, bcfg.d_model), jnp.float32, rules,
+                ("batch", None, None)),
+            sds((b, cfg.max_query_len), jnp.bool_, rules, ("batch", None)),
+            sds((b, cfg.max_doc_len, e), jnp.float16, rules,
+                ("batch", None, None)),
+            sds((b, cfg.max_doc_len), jnp.bool_, rules, ("batch", None)))
+    frac = (bcfg.n_layers - cfg.l) / bcfg.n_layers
+    return Cell(spec.name, shape_name, info["kind"], join_step,
+                (params, *args), model_flops=2.0 * n * frac * b * s)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, rules: ShardingRules) -> Cell:
+    spec = get_arch(arch)
+    if arch == "prettr-bert":
+        return make_prettr_cell(spec, shape_name, rules)
+    if spec.family == "lm":
+        return make_lm_cell(spec, shape_name, rules)
+    if spec.family == "gnn":
+        return make_gnn_cell(spec, shape_name, rules)
+    return make_recsys_cell(spec, shape_name, rules)
+
+
+def cell_names(include_prettr: bool = True) -> list[tuple[str, str]]:
+    """All (arch, shape) cells the dry-run must pass."""
+    from repro.configs import ASSIGNED_ARCHS, arch_cells
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in arch_cells(arch):
+            out.append((arch, shape))
+    if include_prettr:
+        for shape in PRETTR_SHAPES:
+            out.append(("prettr-bert", shape))
+    return out

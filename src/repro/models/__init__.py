@@ -1,0 +1,1 @@
+"""Model zoo: generic transformer LM, MoE, GNN (DimeNet), recsys."""

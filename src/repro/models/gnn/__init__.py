@@ -1,0 +1,1 @@
+"""GNN models (DimeNet) on segment_sum message passing."""

@@ -1,0 +1,278 @@
+"""Shared NN layers, written as pure functions over param pytrees.
+
+All matmuls run in ``cfg.compute_dtype`` (bf16 on TPU) with fp32 softmax /
+normalization statistics; parameters are kept in ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def apply_norm(params: dict, x, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, *, base: float = 10000.0, fraction: float = 1.0):
+    """Apply RoPE to ``x: [..., S, H, D]`` with ``positions: [..., S]``.
+
+    ``fraction < 1`` rotates only the first ``fraction*D`` dims (ChatGLM's
+    "2d" RoPE rotates half the head dim and passes the rest through).
+    ``base`` may be a traced scalar (per-layer bases, e.g. Gemma3 local 10k /
+    global 1M, ride through a layer scan).
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq_exponents = jnp.arange(half, dtype=jnp.float32) / half
+    timescale = jnp.asarray(base, jnp.float32) ** freq_exponents
+    # positions: [..., S] -> [..., S, 1, half]
+    angles = positions.astype(jnp.float32)[..., None, None] / timescale
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x_rot[..., :half].astype(jnp.float32), x_rot[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1) if rot < d else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def attention_mask(q_pos, k_pos, *, causal: bool, window,
+                   q_seg=None, k_seg=None, split_segments=False,
+                   q_valid=None, k_valid=None):
+    """Boolean [**, Sq, Skv] mask. True = may attend.
+
+    ``window`` is a (possibly traced) int: ``<0`` disables windowing.
+    ``split_segments`` implements the PreTTR train-time mask: tokens may only
+    attend within their own segment (query side vs document side). It may be
+    a traced bool (per-layer flag riding through a layer scan).
+    """
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    if causal:
+        m &= dk <= dq
+    window = jnp.asarray(window)
+    m &= (window < 0) | (dq - dk < window)
+    if q_seg is not None and k_seg is not None:
+        same_seg = q_seg[..., :, None] == k_seg[..., None, :]
+        # when the (possibly traced) split flag is off, segments don't restrict
+        m &= same_seg | ~jnp.asarray(split_segments)
+    if q_valid is not None:
+        m &= q_valid[..., :, None]
+    if k_valid is not None:
+        m &= k_valid[..., None, :]
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k, n_rep: int):
+    """[B, S, Hkv, D] -> [B, S, Hkv*n_rep, D] for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def plain_attention(q, k, v, mask, *, scale: float):
+    """Reference O(S^2)-memory attention. q: [B,Sq,Hq,D]; k,v: [B,Skv,Hkv,D]
+    (GQA repeated here); mask broadcastable to [B,1,Sq,Skv]."""
+    n_rep = q.shape[2] // k.shape[2]
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def blocked_attention(q, k, v, *, scale: float, block_kv: int,
+                      q_pos, k_pos, causal: bool, window=-1,
+                      q_seg=None, k_seg=None, split_segments=False,
+                      k_valid=None):
+    """Flash-style attention in pure XLA: scan over KV blocks with an online
+    softmax so the full [Sq, Skv] score matrix is never materialized.  Each
+    block step is remat'd, so backward memory is O(Sq * block_kv).
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D] (GQA handled here).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    nblocks = -(-skv // block_kv)
+    pad = nblocks * block_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)))
+        pad_valid = jnp.pad(jnp.ones((b, skv), bool), ((0, 0), (0, pad)))
+        k_valid = pad_valid if k_valid is None else jnp.pad(k_valid, ((0, 0), (0, pad)))
+        if k_seg is not None:
+            k_seg = jnp.pad(k_seg, ((0, 0), (0, pad)), constant_values=-1)
+    if k_seg is None:
+        k_seg = jnp.zeros(k.shape[:2], jnp.int32)
+    if k_valid is None:
+        k_valid = jnp.ones(k.shape[:2], bool)
+    if q_seg is None:
+        q_seg = jnp.zeros((b, sq), jnp.int32)
+
+    kb = k.reshape(b, nblocks, block_kv, hkv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblocks, block_kv, hkv, d).transpose(1, 0, 2, 3, 4)
+    kposb = k_pos.reshape(b, nblocks, block_kv).transpose(1, 0, 2)
+    ksegb = k_seg.reshape(b, nblocks, block_kv).transpose(1, 0, 2)
+    kvalb = k_valid.reshape(b, nblocks, block_kv).transpose(1, 0, 2)
+
+    qh = q.transpose(0, 2, 1, 3)  # [B, H, Sq, D]
+
+    def block_step(carry, xs):
+        o, m, l = carry
+        kblk, vblk, kp, ks, kvd = xs
+        kblk = _repeat_kv(kblk, n_rep).transpose(0, 2, 1, 3)   # [B,H,bk,D]
+        vblk = _repeat_kv(vblk, n_rep).transpose(0, 2, 1, 3)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        msk = attention_mask(q_pos, kp, causal=causal, window=window,
+                             q_seg=q_seg, k_seg=ks, split_segments=split_segments,
+                             k_valid=kvd)
+        s = jnp.where(msk[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    block_step = jax.checkpoint(block_step, prevent_cse=False)
+    (o, m, l), _ = lax.scan(block_step, (o0, m0, l0), (kb, vb, kposb, ksegb, kvalb))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)  # [B, Sq, H, D]
+
+
+def decode_attention(q, k_cache, v_cache, *, scale: float, k_pos, q_pos,
+                     window=-1, k_valid=None):
+    """Single-step decode: q: [B, 1, H, D]; caches: [B, S, Hkv, D].
+    O(S) — one new token against the cache. Softmax over a (possibly
+    device-sharded) S axis; GSPMD turns the reductions into partial
+    reduce + all-reduce (flash-decode sharding)."""
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    n_rep = hq // hkv
+    kk = _repeat_kv(k_cache, n_rep)
+    vv = _repeat_kv(v_cache, n_rep)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk, preferred_element_type=jnp.float32) * scale
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    msk = dk <= dq
+    window = jnp.asarray(window)
+    msk &= (window < 0) | (dq - dk < window)
+    if k_valid is not None:
+        msk &= k_valid[..., None, :]
+    s = jnp.where(msk[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(vv.dtype), vv)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp(params: dict, x, *, gated: bool, activation: str):
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[activation]
+    if gated:
+        g = act(x @ params["w_gate"])
+        u = x @ params["w_up"]
+        return (g * u) @ params["w_down"]
+    h = act(x @ params["w_in"] + params.get("b_in", 0))
+    out = h @ params["w_out"]
+    if "b_out" in params:
+        out = out + params["b_out"]
+    return out
+
+
+def init_mlp(key, d: int, d_ff: int, *, gated: bool, dtype, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    if gated:
+        p = {"w_gate": dense_init(ks[0], d, d_ff, dtype),
+             "w_up": dense_init(ks[1], d, d_ff, dtype),
+             "w_down": dense_init(ks[2], d_ff, d, dtype)}
+        ax = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+              "w_down": ("mlp", "embed")}
+    else:
+        p = {"w_in": dense_init(ks[0], d, d_ff, dtype),
+             "w_out": dense_init(ks[1], d_ff, d, dtype)}
+        ax = {"w_in": ("embed", "mlp"), "w_out": ("mlp", "embed")}
+        if bias:
+            p["b_in"] = jnp.zeros((d_ff,), dtype)
+            p["b_out"] = jnp.zeros((d,), dtype)
+            ax["b_in"] = ("mlp",)
+            ax["b_out"] = ("embed",)
+    return p, ax
+
+
+def init_norm(key, d: int, kind: str, dtype):
+    del key
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}, {"scale": ("embed",)}
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)})

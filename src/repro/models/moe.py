@@ -1,0 +1,183 @@
+"""Mixture-of-Experts FFN with top-k routing and grouped capacity dispatch.
+
+Dispatch follows GShard's *grouped* formulation: tokens are split into
+``G`` groups aligned with the data-parallel shards, and each group routes
+its own tokens into a per-group ``[E, C_g, d]`` buffer **locally** (argsort
+by expert id -> within-expert rank -> scatter).  Under GSPMD this keeps the
+entire routing computation shard-local; only the expert einsum crosses the
+mesh (the EP all-to-all), which is exactly the collective a production MoE
+pays.  A global (group-free) sort would instead force XLA to materialize
+and exchange the full token permutation across shards — measured at
+O(100GiB)/device at qwen3 scale in the dry-run.
+
+Sharding: buffer ``[G, E, C, d]`` with G over the data axes and E over
+``model`` (expert parallelism) when E divides it, else C over ``model``
+(granite's 40 experts on a 16-way axis).
+
+The sort-based rank computation is O(T log T) and avoids GShard's
+O(T*E*C) one-hot dispatch einsum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, d: int, d_ff: int, n_experts: int, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d, n_experts, dtype, scale=0.02),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, d_ff, dtype))(
+            jax.random.split(ks[1], n_experts)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, d_ff, dtype))(
+            jax.random.split(ks[2], n_experts)),
+        "w_down": jax.vmap(lambda k: dense_init(k, d_ff, d, dtype))(
+            jax.random.split(ks[3], n_experts)),
+    }
+    # Both `experts` and `mlp` annotate toward the `model` axis;
+    # divisible_spec keeps the first that divides (qwen 128 experts -> EP;
+    # granite's 40 don't divide 16, so d_ff gets the axis — which also
+    # keeps the expert einsum free of partial-sum all-reduces).
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+    return p, ax
+
+
+def _mesh_info():
+    from repro.dist.context import current_rules
+
+    rules = current_rules()
+    if rules is None:
+        return None, 1, 1
+    mesh = rules.mesh
+    m = mesh.shape.get("model", 1) if "model" in mesh.axis_names else 1
+    g = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            g *= mesh.shape[a]
+    return mesh, g, m
+
+
+def _constrain(buf, mesh, spec):
+    if mesh is None:
+        return buf
+    return jax.lax.with_sharding_constraint(buf, NamedSharding(mesh, spec))
+
+
+def _group_axes(mesh, include_model: bool):
+    fs = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if include_model and "model" in mesh.axis_names:
+        fs = fs + ("model",)
+    return fs if fs else None
+
+
+def _dispatch_group(x_g, experts_g, capacity: int, n_experts: int):
+    """Local per-group dispatch. x_g: [Tg, d]; experts_g: [Tg, k] ->
+    (buf [E, C, d], safe_rank [Tg, k], keep [Tg, k]).
+
+    The scatter loops over the k routing slots so no [Tg*k, d] float tensor
+    is ever materialized (measured 10s-of-GiB in backward otherwise)."""
+    tg, k = experts_g.shape
+    n = tg * k
+    flat_e = experts_g.reshape(n)
+    sort_idx = jnp.argsort(flat_e)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(n) - starts[sorted_e]
+    rank = jnp.zeros((n,), rank_sorted.dtype).at[sort_idx].set(rank_sorted)
+    rank = rank.reshape(tg, k)
+    keep = rank < capacity
+    safe_rank = jnp.where(keep, rank, capacity)      # OOB rows are dropped
+    buf = jnp.zeros((n_experts, capacity, x_g.shape[-1]), x_g.dtype)
+    for kk in range(k):                              # static unroll, [Tg, d]
+        buf = buf.at[experts_g[:, kk], safe_rank[:, kk]].set(x_g, mode="drop")
+    return buf, safe_rank, keep
+
+
+def moe_ffn(params: dict, x, *, top_k: int, capacity_factor: float = 1.25,
+            activation=jax.nn.silu, n_groups: int | None = None):
+    """x: [T, d] flat tokens -> ([T, d], aux_loss).
+
+    Group count: with E divisible by the ``model`` axis, groups align with
+    the data shards and the dispatch buffer is *staged*: scatter into a
+    group-local buffer (scatters into an expert-sharded tensor trigger
+    GSPMD involuntary rematerialization), then a free slice onto the
+    expert-parallel layout for the einsum, then an intra-group all-gather
+    back for the combine.  With a non-divisible E (granite: 40 on 16),
+    every device becomes its own group and routes its tokens through all
+    experts locally — no EP, weights stream through FSDP all-gathers."""
+    t, d = x.shape
+    n_experts = params["router"].shape[-1]
+    mesh, g_mesh, n_model = _mesh_info()
+    use_ep = n_model > 1 and n_experts % n_model == 0
+    g = n_groups or (g_mesh if use_ep else g_mesh * n_model)
+    if t % g != 0:
+        g = 1
+    tg = t // g
+
+    router_logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)             # [T, E]
+    weights, experts = jax.lax.top_k(probs, top_k)             # [T, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # Switch-style load-balancing aux loss
+    density = jnp.mean(jax.nn.one_hot(experts[:, 0], n_experts), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux_loss = n_experts * jnp.sum(density * mean_probs)
+
+    capacity = int(max(4, capacity_factor * tg * top_k / n_experts))
+    lane = 128 if capacity > 128 else 4
+    capacity = -(-capacity // lane) * lane
+
+    x_g = x.reshape(g, tg, d)
+    e_g = experts.reshape(g, tg, top_k)
+    buf, safe_rank, keep = jax.vmap(
+        lambda xx, ee: _dispatch_group(xx, ee, capacity, n_experts))(x_g, e_g)
+
+    if mesh is not None:
+        local_spec = P(_group_axes(mesh, not use_ep), None, None, None)
+        buf = _constrain(buf, mesh, local_spec)                # [G, E, C, d]
+        if use_ep:
+            # free slice: each model rank keeps its E/n_model experts
+            buf = _constrain(buf, mesh,
+                             P(_group_axes(mesh, False), "model", None, None))
+
+    gg = activation(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+    uu = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    out_buf = jnp.einsum("gecf,efd->gecd", gg * uu, params["w_down"])
+
+    if mesh is not None:
+        if use_ep:
+            # intra-group all-gather over model for the local combine
+            out_buf = _constrain(out_buf, mesh,
+                                 P(_group_axes(mesh, False), "model", None,
+                                   None))
+        out_buf = _constrain(out_buf, mesh,
+                             P(_group_axes(mesh, not use_ep), None, None,
+                               None))
+
+    # combine: scan over routing slots with remat — exactly one [G, Tg, d]
+    # slot gather live at a time (8 concurrent slot gathers measured ~25GiB
+    # per device at granite train scale)
+    w_g = (weights.reshape(g, tg, top_k) * keep).astype(jnp.float32)
+
+    def slot_step(acc, xs):
+        ee, rr, ww = xs                                     # [G, Tg] each
+        gath = jax.vmap(lambda ob, e1, r1: ob.at[e1, r1].get(
+            mode="fill", fill_value=0))(out_buf, ee, rr)
+        return acc + gath.astype(jnp.float32) * ww[:, :, None], None
+
+    xs = (e_g.transpose(2, 0, 1), safe_rank.transpose(2, 0, 1),
+          w_g.transpose(2, 0, 1))
+    out, _ = jax.lax.scan(jax.checkpoint(slot_step, prevent_cse=False),
+                          jnp.zeros((g, tg, d), jnp.float32), xs)
+    return out.reshape(t, d).astype(x.dtype), aux_loss

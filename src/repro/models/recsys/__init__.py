@@ -1,0 +1,1 @@
+"""Recsys models: DLRM, DeepFM, xDeepFM, BERT4Rec + sharded embedding."""

@@ -1,0 +1,208 @@
+"""BERT4Rec (Sun et al., arXiv:1904.06690): bidirectional transformer over
+item sequences, trained with masked-item (Cloze) prediction.
+
+Built directly on :mod:`repro.models.transformer` (causal=False, learned
+positions).  This is the assigned arch where PreTTR applies *natively*
+(DESIGN.md §4): the user's item history is the "document" side — with
+``prettr_l > 0`` the first ``l`` layers mask attention between the history
+segment and the target/[MASK] segment, so history representations can be
+precomputed offline when the history is stable and only layers ``l..n`` run
+at serve time (:func:`precompute_history` / :func:`serve_scores_from_reps`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+MASK_ITEM = 1  # item id reserved for [MASK]; 0 = padding
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000
+    seq_len: int = 200
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    prettr_l: int = 0                # >0: PreTTR split boundary
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+
+    def backbone(self) -> T.TransformerConfig:
+        return T.TransformerConfig(
+            name="bert4rec", n_layers=self.n_blocks, d_model=self.embed_dim,
+            n_heads=self.n_heads, n_kv_heads=self.n_heads,
+            d_ff=4 * self.embed_dim, vocab_size=self.n_items + 2,
+            causal=False, rope=False, learned_pos=self.seq_len + 1,
+            segment_vocab=2, norm="layernorm", gated_mlp=False,
+            activation="gelu", mlp_bias=True, qkv_bias=True,
+            tie_embeddings=True, split_layers=self.prettr_l,
+            compute_dtype=self.compute_dtype, param_dtype=self.param_dtype,
+            remat_block=1, block_kv=256)
+
+
+def init_bert4rec(key, cfg: Bert4RecConfig):
+    return T.init_params(key, cfg.backbone())
+
+
+def forward_hidden(params, cfg: Bert4RecConfig, item_seq, valid):
+    """item_seq: [B, S] (0=pad, 1=[MASK]) -> hidden [B, S, d]."""
+    bcfg = cfg.backbone()
+    segs = jnp.where(item_seq == MASK_ITEM, 0, 1)   # target slots = segment 0
+    hidden, _, _ = T.forward(params, bcfg, item_seq, segs=segs, valid=valid)
+    return hidden
+
+
+def cloze_loss(params, cfg: Bert4RecConfig, batch, *, max_masked: int = 32,
+               logits_chunk: int = 2):
+    """Masked-item cross-entropy.  At 1M items the [B, S, V] logits tensor is
+    petabyte-class, so (as in production BERT training) we gather up to
+    ``max_masked`` masked positions per row first and chunk the softmax —
+    HLO peaks at [B, chunk, V] instead of [B, S, V]."""
+    hidden = forward_hidden(params, cfg, batch["item_seq"], batch["valid"])
+    bcfg = cfg.backbone()
+    targets = batch["targets"]
+    b, s = targets.shape
+    is_masked = (targets > 0).astype(jnp.float32)
+    # indices of (up to) max_masked masked slots; ties resolve to lowest index
+    _, idx = jax.lax.top_k(is_masked - jnp.arange(s) * 1e-6, max_masked)
+    h_sel = jnp.take_along_axis(hidden, idx[..., None], axis=1)   # [B, M, d]
+    t_sel = jnp.take_along_axis(targets, idx, axis=1)             # [B, M]
+    w_sel = jnp.take_along_axis(is_masked, idx, axis=1)
+
+    head = params["embed"]["tokens"].astype(bcfg.compute_dtype)   # [V, d]
+    n_chunks = -(-max_masked // logits_chunk)
+    pad = n_chunks * logits_chunk - max_masked
+    if pad:
+        h_sel = jnp.pad(h_sel, ((0, 0), (0, pad), (0, 0)))
+        t_sel = jnp.pad(t_sel, ((0, 0), (0, pad)))
+        w_sel = jnp.pad(w_sel, ((0, 0), (0, pad)))
+    h_c = h_sel.reshape(b, n_chunks, logits_chunk, -1).transpose(1, 0, 2, 3)
+    t_c = t_sel.reshape(b, n_chunks, logits_chunk).transpose(1, 0, 2)
+    w_c = w_sel.reshape(b, n_chunks, logits_chunk).transpose(1, 0, 2)
+
+    def chunk_step(tot, xs):
+        h, t, w = xs
+        lg = jnp.einsum("bmd,vd->bmv", h, head,
+                        preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum((lse - gold) * w), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(chunk_step),
+                            jnp.zeros((), jnp.float32), (h_c, t_c, w_c))
+    return total / jnp.maximum(jnp.sum(w_sel), 1.0)
+
+
+def two_stage_topk(scores, k: int, n_shards: int):
+    """top-k over a (vocab-)sharded last axis without gathering it: local
+    top-k per shard slice, then a tiny global top-k over the [B, shards*k]
+    candidates.  With the reshape aligned to the sharding, GSPMD keeps stage
+    one local and only the candidate set crosses the network."""
+    b, v = scores.shape
+    if n_shards <= 1 or v % n_shards:
+        vals, ids = jax.lax.top_k(scores, k)
+        return vals, ids
+    s = scores.reshape(b, n_shards, v // n_shards)
+    v1, i1 = jax.lax.top_k(s, k)                       # [B, shards, k] local
+    base = (jnp.arange(n_shards) * (v // n_shards))[None, :, None]
+    i1 = i1 + base
+    v2, i2 = jax.lax.top_k(v1.reshape(b, -1), k)       # [B, k] global, tiny
+    return v2, jnp.take_along_axis(i1.reshape(b, -1), i2, axis=1)
+
+
+def serve_topk(params, cfg: Bert4RecConfig, item_seq, valid, *, k: int = 100,
+               batch_chunk: int = 4096, vocab_shards: int = 16):
+    """Next-item serving: last valid position holds [MASK]; returns
+    (scores [B, k], item_ids [B, k]).  The *entire* pipeline (encoder
+    forward + scoring + top-k) is batch-chunked: at serve_bulk scale the
+    encoder's own attention transients, not just the [B, V] scores, are the
+    peak-memory hazard.  Top-k is two-stage so the vocab-sharded scores
+    never gather."""
+    bcfg = cfg.backbone()
+    head = params["embed"]["tokens"].astype(bcfg.compute_dtype)
+    b, s = item_seq.shape
+    cb = min(batch_chunk, b)
+    n_chunks = -(-b // cb)
+    pad = n_chunks * cb - b
+    if pad:
+        item_seq = jnp.pad(item_seq, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+    seq_c = item_seq.reshape(n_chunks, cb, s)
+    val_c = valid.reshape(n_chunks, cb, s)
+    v = head.shape[0]
+    shards = vocab_shards if v % vocab_shards == 0 else 1
+
+    def chunk_step(_, xs):
+        seq, val = xs
+        hidden = forward_hidden(params, cfg, seq, val)
+        mask_pos = jnp.maximum(jnp.sum(val, axis=-1) - 1, 0)
+        h = jnp.take_along_axis(
+            hidden, mask_pos[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        lg = jnp.einsum("bd,vd->bv", h, head,
+                        preferred_element_type=jnp.float32)
+        vals, ids = two_stage_topk(lg, k, shards)
+        return None, (vals, ids)
+
+    _, (vals, ids) = jax.lax.scan(chunk_step, None, (seq_c, val_c))
+    return vals.reshape(-1, k)[:b], ids.reshape(-1, k)[:b]
+
+
+def serve_scores(params, cfg: Bert4RecConfig, item_seq, valid):
+    """Full-score variant (small item vocabs / tests): [B, n_items+2]."""
+    bcfg = cfg.backbone()
+    hidden = forward_hidden(params, cfg, item_seq, valid)
+    mask_pos = jnp.sum(valid, axis=-1) - 1
+    h = jnp.take_along_axis(hidden, mask_pos[:, None, None].astype(jnp.int32),
+                            axis=1)
+    return T.logits(params, bcfg, h)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# PreTTR split serving (prettr_l > 0)
+# ---------------------------------------------------------------------------
+
+
+def precompute_history(params, cfg: Bert4RecConfig, hist_seq, valid):
+    """Offline: history (segment 1, positions 1..S) through layers 0..l."""
+    bcfg = cfg.backbone()
+    b, s = hist_seq.shape
+    positions = jnp.broadcast_to(1 + jnp.arange(s), (b, s))
+    segs = jnp.ones((b, s), jnp.int32)
+    x = T.embed(params, bcfg, hist_seq, positions, segs)
+    x, _ = T.run_layer_range(params, bcfg, x, 0, cfg.prettr_l,
+                             positions=positions, segs=segs, valid=valid)
+    return x
+
+
+def serve_scores_from_reps(params, cfg: Bert4RecConfig, hist_reps, hist_valid):
+    """Online: join a fresh [MASK] target slot (position 0, segment 0) with
+    precomputed history reps, run layers l..n, score the target."""
+    bcfg = cfg.backbone()
+    b = hist_reps.shape[0]
+    tpos = jnp.zeros((b, 1), jnp.int32)
+    tseg = jnp.zeros((b, 1), jnp.int32)
+    tgt = T.embed(params, bcfg, jnp.full((b, 1), MASK_ITEM, jnp.int32),
+                  tpos, tseg)
+    # target slot passes through layers 0..l alone (split mask = no cross
+    # attention below l, and a single token only attends itself)
+    tgt, _ = T.run_layer_range(params, bcfg, tgt, 0, cfg.prettr_l,
+                               positions=tpos, segs=tseg,
+                               valid=jnp.ones((b, 1), bool))
+    s = hist_reps.shape[1]
+    x = jnp.concatenate([tgt, hist_reps.astype(tgt.dtype)], axis=1)
+    positions = jnp.concatenate(
+        [tpos, jnp.broadcast_to(1 + jnp.arange(s), (b, s))], axis=1)
+    segs = jnp.concatenate([tseg, jnp.ones((b, s), jnp.int32)], axis=1)
+    valid = jnp.concatenate([jnp.ones((b, 1), bool), hist_valid], axis=1)
+    x, _ = T.run_layer_range(params, bcfg, x, cfg.prettr_l, bcfg.n_layers,
+                             positions=positions, segs=segs, valid=valid)
+    from repro.models.layers import apply_norm
+    h = apply_norm(params["final_norm"], x[:, :1], bcfg.norm)
+    return T.logits(params, bcfg, h)[:, 0]

@@ -1,0 +1,151 @@
+"""DeepFM (Guo et al., arXiv:1703.04247) and xDeepFM (Lian et al.,
+arXiv:1803.05170).
+
+DeepFM: y = w0 + sum first-order + FM second-order + DNN(flat embeddings).
+FM second-order uses the O(F*D) identity 0.5*((sum v)^2 - sum v^2).
+
+xDeepFM replaces FM with the Compressed Interaction Network (CIN):
+x^{k+1}_{h,d} = sum_{i,j} W^k_{h,i,j} * x^k_{i,d} * x^0_{j,d}  (outer
+product per embedding dim, compressed by a learned map), with per-layer
+sum-pooled logits.
+
+Retrieval mode mirrors dlrm.py: item-side field embeddings precomputed
+offline (PreTTR analogue); for xDeepFM only the embedding gather is
+precomputable — CIN mixes fields at its first layer (inapplicability noted
+in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.recsys import embedding as E
+from repro.models.recsys.dlrm import _mlp, _mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_fields: int = 39
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 10
+    mlp: tuple = (400, 400, 400)
+    interaction: str = "fm"          # "fm" | "cin"
+    cin_layers: tuple = ()           # xDeepFM: (200, 200, 200)
+    item_fields: tuple = tuple(range(20, 39))
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+
+    @property
+    def vocab_sizes(self):
+        return (self.vocab_per_field,) * self.n_fields
+
+
+def init_deepfm(key, cfg: DeepFMConfig):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    table, table_ax = E.init_fused_table(k1, cfg.vocab_sizes, cfg.embed_dim,
+                                         cfg.param_dtype)
+    # first-order weights: one scalar per row (FM linear term); rows match
+    # the (padded) fused table so both shard identically
+    w1 = (jax.random.normal(k2, (table.shape[0], 1)) * 0.01) \
+        .astype(cfg.param_dtype)
+    dnn, dnn_ax = _mlp_init(k3, (cfg.n_fields * cfg.embed_dim, *cfg.mlp, 1),
+                            cfg.param_dtype)
+    params = {"table": table, "w1": w1, "b0": jnp.zeros((), cfg.param_dtype),
+              "dnn": dnn}
+    axes = {"table": table_ax, "w1": ("table_rows", None), "b0": (),
+            "dnn": dnn_ax}
+    if cfg.interaction == "cin":
+        cin, cin_ax = [], []
+        h_prev = cfg.n_fields
+        for i, h in enumerate(cfg.cin_layers):
+            cin.append({"w": dense_init(jax.random.fold_in(k4, i),
+                                        h_prev * cfg.n_fields, h,
+                                        cfg.param_dtype)})
+            cin_ax.append({"w": (None, "mlp")})
+            h_prev = h
+        params["cin"] = cin
+        params["cin_out"] = dense_init(k5, sum(cfg.cin_layers), 1,
+                                       cfg.param_dtype)
+        axes["cin"] = cin_ax
+        axes["cin_out"] = ("mlp", None)
+    return params, axes
+
+
+def fm_second_order(emb):
+    """emb: [B, F, D] -> [B] via 0.5*((sum_f v)^2 - sum_f v^2)."""
+    s = jnp.sum(emb, axis=1)
+    s2 = jnp.sum(emb * emb, axis=1)
+    return 0.5 * jnp.sum(s * s - s2, axis=-1)
+
+
+def cin(params_cin, cin_out, x0):
+    """Compressed Interaction Network. x0: [B, F, D] -> [B] logit."""
+    xs, pooled = x0, []
+    for lyr in params_cin:
+        # outer product over field axes, per embedding dim
+        z = jnp.einsum("bhd,bfd->bhfd", xs, x0)
+        b, h, f, d = z.shape
+        xs = jnp.einsum("bkd,kh->bhd", z.reshape(b, h * f, d), lyr["w"])
+        xs = jax.nn.relu(xs)
+        pooled.append(jnp.sum(xs, axis=-1))          # [B, H]
+    return (jnp.concatenate(pooled, axis=-1) @ cin_out)[:, 0]
+
+
+def deepfm_forward(params, cfg: DeepFMConfig, sparse_ids):
+    """sparse_ids: [B, F] -> logits [B]."""
+    cd = cfg.compute_dtype
+    offsets = E.fused_table_offsets(cfg.vocab_sizes)
+    flat = sparse_ids + jnp.asarray(offsets, sparse_ids.dtype)[None, :]
+    emb = E.take_rows(params["table"].astype(cd), flat)        # [B, F, D]
+    first = E.take_rows(params["w1"], flat)[..., 0].sum(axis=1)
+    b = sparse_ids.shape[0]
+    dnn_in = emb.reshape(b, -1)
+    deep = _mlp(jax.tree.map(lambda a: a.astype(cd), params["dnn"]), dnn_in)[:, 0]
+    logit = params["b0"] + first + deep.astype(jnp.float32)
+    if cfg.interaction == "cin":
+        logit = logit + cin(jax.tree.map(lambda a: a.astype(cd), params["cin"]),
+                            params["cin_out"].astype(cd), emb) \
+            .astype(jnp.float32)
+    else:
+        logit = logit + fm_second_order(emb).astype(jnp.float32)
+    return logit
+
+
+def bce_loss(params, cfg: DeepFMConfig, batch):
+    logits = deepfm_forward(params, cfg, batch["sparse"])
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def item_vectors(params, cfg: DeepFMConfig, item_ids):
+    """Precompute item-side embedding sums offline (PreTTR analogue).
+    item_ids: [N, n_item_fields] -> ([N, D] second-order partial,
+    [N] first-order partial)."""
+    offsets = E.fused_table_offsets(cfg.vocab_sizes)
+    item_off = offsets[list(cfg.item_fields)]
+    flat = item_ids + jnp.asarray(item_off, item_ids.dtype)[None, :]
+    emb = E.take_rows(params["table"], flat)
+    first = E.take_rows(params["w1"], flat)[..., 0].sum(axis=1)
+    return jnp.sum(emb, axis=1), first
+
+
+def retrieval_scores(params, cfg: DeepFMConfig, user_ids, item_vecs,
+                     item_first):
+    """FM cross-term between user-side and item-side embedding sums:
+    score(u, i) = b0 + first(u) + first(i) + <sum_emb(u), sum_emb(i)>
+    (the user-internal / item-internal FM terms are rank-constant).
+    user_ids: [B, n_user_fields]; item_vecs: [N, D] -> [B, N]."""
+    offsets = E.fused_table_offsets(cfg.vocab_sizes)
+    user_fields = [f for f in range(cfg.n_fields) if f not in cfg.item_fields]
+    flat = user_ids + jnp.asarray(offsets[user_fields], user_ids.dtype)[None, :]
+    emb_u = E.take_rows(params["table"], flat).sum(axis=1)        # [B, D]
+    first_u = E.take_rows(params["w1"], flat)[..., 0].sum(axis=1)
+    cross = jnp.einsum("bd,nd->bn", emb_u, item_vecs,
+                       preferred_element_type=jnp.float32)
+    return params["b0"] + first_u[:, None] + item_first[None, :] + cross

@@ -1,0 +1,149 @@
+"""DLRM (Naumov et al., arXiv:1906.00091), MLPerf configuration.
+
+dense [B,13] -> bottom MLP 13-512-256-128; 26 categorical lookups (dim 128,
+fused table); dot-product feature interaction over the 27 vectors (lower
+triangle, 351 pairs) concat bottom output -> top MLP 1024-1024-512-256-1.
+
+PreTTR analogue (DESIGN.md §4): ``item_fields`` marks the fields belonging
+to the *item side*; :func:`item_tower` / :func:`retrieval_scores` precompute
+item vectors offline and score 10^6 candidates with one matmul — the
+``retrieval_cand`` cell and the paper's precompute-then-join idea mapped to
+recsys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.recsys import embedding as E
+
+# MLPerf / Criteo-1TB per-field vocabulary sizes (public benchmark config)
+CRITEO_1TB_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm"
+    n_dense: int = 13
+    vocab_sizes: tuple = CRITEO_1TB_VOCABS
+    embed_dim: int = 128
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    # retrieval split: which sparse fields are item-side (rest = user-side)
+    item_fields: tuple = tuple(range(13, 26))
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self):
+        return len(self.vocab_sizes)
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return ([{"w": dense_init(ks[i], dims[i], dims[i + 1], dtype),
+              "b": jnp.zeros((dims[i + 1],), dtype)}
+             for i in range(len(dims) - 1)],
+            [{"w": ("embed", "mlp"), "b": ("mlp",)}
+             for _ in range(len(dims) - 1)])
+
+
+def _mlp(layers, x, final_act=False):
+    for i, lyr in enumerate(layers):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_dlrm(key, cfg: DLRMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    table, table_ax = E.init_fused_table(k1, cfg.vocab_sizes, cfg.embed_dim,
+                                         cfg.param_dtype)
+    n_vec = cfg.n_sparse + 1
+    n_pairs = n_vec * (n_vec - 1) // 2
+    bot, bot_ax = _mlp_init(k2, (cfg.n_dense, *cfg.bot_mlp), cfg.param_dtype)
+    top, top_ax = _mlp_init(k3, (n_pairs + cfg.bot_mlp[-1], *cfg.top_mlp),
+                            cfg.param_dtype)
+    params = {"table": table, "bot": bot, "top": top}
+    axes = {"table": table_ax, "bot": bot_ax, "top": top_ax}
+    return params, axes
+
+
+def dot_interaction(vectors):
+    """vectors: [B, F, D] -> [B, F*(F-1)/2] pairwise dots (lower triangle)."""
+    z = jnp.einsum("bfd,bgd->bfg", vectors, vectors,
+                   preferred_element_type=jnp.float32)
+    f = vectors.shape[1]
+    iu, ju = np.tril_indices(f, k=-1)
+    return z[:, iu, ju]
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense, sparse_ids):
+    """dense: [B, 13] f32; sparse_ids: [B, 26] int — logits [B]."""
+    cd = cfg.compute_dtype
+    offsets = E.fused_table_offsets(cfg.vocab_sizes)
+    bot = _mlp(jax.tree.map(lambda a: a.astype(cd), params["bot"]),
+               dense.astype(cd), final_act=True)                    # [B, 128]
+    emb = E.lookup_single(params["table"].astype(cd), offsets, sparse_ids)
+    vectors = jnp.concatenate([bot[:, None, :], emb], axis=1)       # [B, 27, D]
+    inter = dot_interaction(vectors).astype(cd)
+    x = jnp.concatenate([inter, bot], axis=-1)
+    return _mlp(jax.tree.map(lambda a: a.astype(cd), params["top"]), x)[:, 0] \
+        .astype(jnp.float32)
+
+
+def bce_loss(params, cfg: DLRMConfig, batch):
+    logits = dlrm_forward(params, cfg, batch["dense"], batch["sparse"])
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# Retrieval mode (PreTTR analogue)
+# ---------------------------------------------------------------------------
+
+
+def item_tower(params, cfg: DLRMConfig, item_ids):
+    """Precompute item-side vectors offline: [N, n_item_fields] ->
+    [N, D] (mean of item-field embeddings) — stored like a PreTTR index."""
+    offsets = E.fused_table_offsets(cfg.vocab_sizes)
+    item_off = offsets[list(cfg.item_fields)]
+    emb = E.take_rows(params["table"],
+                      item_ids + jnp.asarray(item_off,
+                                             item_ids.dtype)[None, :])
+    return jnp.mean(emb, axis=1)
+
+
+def user_tower(params, cfg: DLRMConfig, dense, user_sparse_ids):
+    """Online user-side vector [B, D]."""
+    cd = cfg.compute_dtype
+    offsets = E.fused_table_offsets(cfg.vocab_sizes)
+    user_fields = [f for f in range(cfg.n_sparse) if f not in cfg.item_fields]
+    user_off = offsets[user_fields]
+    bot = _mlp(jax.tree.map(lambda a: a.astype(cd), params["bot"]),
+               dense.astype(cd), final_act=True)
+    emb = E.take_rows(params["table"].astype(cd),
+                      user_sparse_ids
+                      + jnp.asarray(user_off,
+                                    user_sparse_ids.dtype)[None, :])
+    return bot + jnp.mean(emb, axis=1).astype(cd)
+
+
+def retrieval_scores(params, cfg: DLRMConfig, dense, user_sparse_ids,
+                     item_vectors):
+    """One user against N precomputed candidates: [B, N] scores — a single
+    [B,D]x[D,N] matmul, NOT a loop (retrieval_cand cell)."""
+    u = user_tower(params, cfg, dense, user_sparse_ids)
+    return jnp.einsum("bd,nd->bn", u, item_vectors.astype(u.dtype),
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,183 @@
+"""Sharded embedding tables + EmbeddingBag.
+
+JAX has no ``nn.EmbeddingBag`` and no CSR sparse — per the assignment this
+is built here from ``jnp.take`` + ``jax.ops.segment_sum``:
+
+* All categorical fields share one **fused table** ``[total_rows, dim]``
+  (per-field row offsets), the production DLRM/FBGEMM layout.  Sharding one
+  big array row-wise over ``("data","model")`` gives 256-way table
+  parallelism with a single sharding rule; GSPMD turns the gather into the
+  classic ids-all-to-all + vectors-all-to-all exchange (visible in the
+  dry-run HLO, counted in the collective roofline term).
+* ``embedding_bag`` reduces multi-hot bags (sum/mean) via segment_sum.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_table_offsets(vocab_sizes) -> np.ndarray:
+    """Per-field starting row in the fused table."""
+    return np.concatenate([[0], np.cumsum(np.asarray(vocab_sizes))[:-1]]) \
+        .astype(np.int64)
+
+
+def init_fused_table(key, vocab_sizes, dim: int, dtype=jnp.float32,
+                     scale: float = 0.01, pad_multiple: int = 512):
+    """Rows padded to ``pad_multiple`` so the fused table divides any mesh
+    (512 devices multi-pod) for row sharding + owner-aligned lookup."""
+    total = int(np.sum(vocab_sizes))
+    total = -(-total // pad_multiple) * pad_multiple
+    table = (jax.random.normal(key, (total, dim), jnp.float32) * scale) \
+        .astype(dtype)
+    return table, ("table_rows", None)
+
+
+def lookup_single(table, offsets, ids):
+    """Single-hot lookup. ids: [B, F] per-field indices -> [B, F, dim].
+
+    With sharding rules installed (production mesh) this routes through the
+    owner-aligned all-to-all path — a naive ``jnp.take`` on a row-sharded
+    table makes GSPMD *replicate the full table per device* (measured
+    ~90-380GiB/device at Criteo-1TB scale in the dry-run)."""
+    flat = ids + jnp.asarray(offsets, ids.dtype)[None, :]
+    from repro.dist.context import current_rules
+    rules = current_rules()
+    if rules is not None and table.shape[0] % rules.mesh.devices.size == 0 \
+            and rules.mesh.devices.size > 1:
+        b, f = ids.shape
+        out = sharded_lookup(table, flat.reshape(b * f), rules.mesh)
+        return out.reshape(b, f, -1)
+    return jnp.take(table, flat, axis=0)
+
+
+def take_rows(table, flat_ids):
+    """Row gather that is safe on sharded tables: owner-aligned all-to-all
+    under a production mesh, plain take otherwise.  flat_ids: [...]."""
+    from repro.dist.context import current_rules
+    rules = current_rules()
+    shape = flat_ids.shape
+    if rules is not None and rules.mesh.devices.size > 1 \
+            and table.shape[0] % rules.mesh.devices.size == 0:
+        out = sharded_lookup(table, flat_ids.reshape(-1), rules.mesh)
+        return out.reshape(*shape, table.shape[1])
+    return jnp.take(table, flat_ids, axis=0)
+
+
+def _bucket_group(flat_ids, n_shards: int, rows_per: int, capacity: int):
+    """Bucket one group's ids by owner shard.  -> (bucket_ids [S, C],
+    owner [N], slot [N], keep [N])."""
+    n = flat_ids.shape[0]
+    owner = flat_ids // rows_per                          # [N]
+    sort_idx = jnp.argsort(owner)
+    sorted_o = owner[sort_idx]
+    counts = jnp.bincount(owner, length=n_shards)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(n) - starts[sorted_o]
+    rank = jnp.zeros((n,), rank_sorted.dtype).at[sort_idx].set(rank_sorted)
+    keep = rank < capacity
+    slot = jnp.where(keep, rank, capacity)
+    bucket = jnp.zeros((n_shards, capacity), flat_ids.dtype)
+    bucket = bucket.at[owner, slot].set(flat_ids, mode="drop")
+    return bucket, owner, slot, keep
+
+
+def sharded_lookup(table, flat_ids, mesh, *, capacity_factor: float = 4.0):
+    """Distributed embedding lookup (the DLRM all-to-all pattern).
+
+    table: [R, D] row-sharded over every mesh axis; flat_ids: [N] global row
+    ids, batch-sharded over the data axes.  Three stages:
+
+    1. *bucket* (local): each data-shard group sorts its ids by owner shard
+       into fixed-capacity buckets ``[S, C]``;
+    2. *exchange + gather*: the bucket tensor is resharded from group-major
+       to owner-major (GSPMD emits the ids all-to-all) and a ``shard_map``
+       performs the owner-local row gather — the table is never gathered;
+    3. *return + combine* (local): vectors reshard back group-major (vector
+       all-to-all) and are scattered to their requesting positions.
+
+    Over-capacity ids (Zipf skew) fall back to row 0 with a zero mask —
+    sized by ``capacity_factor`` over the uniform expectation.
+    """
+    shard_map = jax.shard_map
+
+    n = flat_ids.shape[0]
+    r, d = table.shape
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    n_shards = mesh.devices.size
+    rows_per = r // n_shards
+    g_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    g = 1
+    for a in g_axes:
+        g *= mesh.shape[a]
+    if n % g:
+        g = 1
+    ng = n // g
+    capacity = int(max(4, capacity_factor * ng / n_shards))
+    capacity = -(-capacity // 8) * 8
+
+    ids_g = flat_ids.reshape(g, ng)
+    bucket, owner, slot, keep = jax.vmap(
+        lambda ii: _bucket_group(ii, n_shards, rows_per, capacity))(ids_g)
+    # ids all-to-all: group-major -> owner-major
+    bucket = jax.lax.with_sharding_constraint(
+        bucket, jax.NamedSharding(mesh, jax.P(None, axes, None)))
+
+    def _owner_gather(table_local, bucket_local):
+        # table_local: [rows_per, D]; bucket_local: [G, 1, C] (my column)
+        idx = jnp.arange(n_shards)  # noqa: F841  (doc: owner == my coords)
+        coord = 0
+        for a in axes:
+            coord = coord * mesh.shape[a] + jax.lax.axis_index(a)
+        local = bucket_local[:, 0] - coord * rows_per
+        local = jnp.clip(local, 0, rows_per - 1)
+        return jnp.take(table_local, local, axis=0)[:, None]   # [G,1,C,D]
+
+    vecs = shard_map(
+        _owner_gather, mesh=mesh,
+        in_specs=(jax.P(axes, None), jax.P(None, axes, None)),
+        out_specs=jax.P(None, axes, None, None),
+        check_vma=False,
+    )(table, bucket)
+    # vector all-to-all: owner-major -> group-major
+    vecs = jax.lax.with_sharding_constraint(
+        vecs, jax.NamedSharding(mesh, jax.P(g_axes or None, None, None, None)))
+    out = jax.vmap(lambda v, o, s: v[o, s])(vecs, owner, slot)   # [G, Ng, D]
+    out = out * keep[..., None].astype(out.dtype)
+    return out.reshape(n, d)
+
+
+def embedding_bag(table, offsets, ids, bag_field, *, n_bags, mode="sum",
+                  weights=None, valid=None):
+    """Multi-hot EmbeddingBag.
+
+    ids: [NNZ] flat indices (already field-offset or raw with ``offsets``
+    added by caller as appropriate); bag_field: [NNZ] bag id in [0, n_bags);
+    optional per-sample weights / validity.  -> [n_bags, dim].
+    """
+    vecs = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        vecs = vecs * weights[:, None]
+    if valid is not None:
+        vecs = vecs * valid[:, None].astype(vecs.dtype)
+    out = jax.ops.segment_sum(vecs, bag_field, num_segments=n_bags)
+    if mode == "mean":
+        ones = jnp.ones_like(bag_field, vecs.dtype) if valid is None \
+            else valid.astype(vecs.dtype)
+        cnt = jax.ops.segment_sum(ones, bag_field, num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def lookup_multihot(table, offsets, ids, valid, *, mode="sum"):
+    """Batched multi-hot: ids [B, F, NNZ] (+valid mask) -> [B, F, dim]."""
+    b, f, nnz = ids.shape
+    flat_ids = (ids + jnp.asarray(offsets, ids.dtype)[None, :, None]).reshape(-1)
+    bag = jnp.arange(b * f, dtype=jnp.int32).repeat(nnz)
+    out = embedding_bag(table, offsets, flat_ids, bag, n_bags=b * f,
+                        mode=mode, valid=valid.reshape(-1))
+    return out.reshape(b, f, -1)

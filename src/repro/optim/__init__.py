@@ -1,0 +1,16 @@
+"""Optimizers, losses, schedules, gradient compression."""
+from repro.optim.adam import (
+    OptimizerConfig,
+    init_opt_state,
+    opt_state_axes,
+    adam_update,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import warmup_cosine, constant
+from repro.optim.compression import compressed_psum, init_error_feedback
+
+__all__ = [
+    "OptimizerConfig", "init_opt_state", "opt_state_axes", "adam_update",
+    "clip_by_global_norm", "warmup_cosine", "constant",
+    "compressed_psum", "init_error_feedback",
+]

@@ -1,0 +1,55 @@
+"""Gradient compression for the inter-pod (DCN) all-reduce.
+
+At 2+ pods the gradient all-reduce crosses data-center network links that
+are ~20x slower than intra-pod ICI.  We compress that hop: int8 quantization
+with per-leaf scales and *error feedback* (the quantization residual is
+carried into the next step), which preserves convergence (Karimireddy et al.,
+2019).  Intra-pod reduction stays full-precision.
+
+Used inside ``shard_map`` over the ``pod`` axis by the train driver when
+``--grad-compression`` is on; the dry-run baseline keeps the plain psum so
+the roofline table reflects the uncompressed collective term (compression is
+then a recorded §Perf iteration).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, error_fb, axis_name: str):
+    """int8 + error-feedback psum over ``axis_name``.  Returns
+    (mean_grads, new_error_fb).  Call inside shard_map with the ``pod``
+    axis manual."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(g32)
+        deq_local = _dequantize(q, scale)
+        new_e = g32 - deq_local                       # residual stays local
+        # int8 payload summed in int32 to avoid overflow across pods
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        scale_sum = jax.lax.psum(scale, axis_name)    # conservative shared scale
+        mean = summed.astype(jnp.float32) * (scale_sum / n) / n
+        return mean.astype(g.dtype), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_fb)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

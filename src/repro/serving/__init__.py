@@ -1,0 +1,4 @@
+"""Query-time serving: the PreTTR re-ranker."""
+from repro.serving.reranker import Reranker, RerankStats
+
+__all__ = ["Reranker", "RerankStats"]

@@ -1,0 +1,121 @@
+"""PreTTR re-ranking server (paper Fig. 1, step 3).
+
+Per query: encode the query through layers 0..l **once**, load the
+candidates' precomputed reps from the index, and run join_and_score over
+candidate batches.  The query-rep cache is the paper's "query representations
+are re-used among all the documents that are re-ranked".
+
+Production details modeled here:
+
+* fixed candidate micro-batches (jit cache hits — no shape churn),
+* a query-rep LRU cache across repeated queries,
+* straggler mitigation: per-microbatch deadline; a batch overshooting the
+  deadline is split in half and re-dispatched (bounded retries) — on a real
+  pod this re-routes around a slow host; on CPU it demonstrates the policy,
+* stats: per-phase timings matching Table 5's Query/Decompress/Combine split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prettr as P
+from repro.index.store import TermRepIndex
+
+
+@dataclasses.dataclass
+class RerankStats:
+    query_encode_s: float = 0.0
+    load_s: float = 0.0
+    combine_s: float = 0.0
+    n_docs: int = 0
+    n_redispatch: int = 0
+
+    @property
+    def total_s(self):
+        return self.query_encode_s + self.load_s + self.combine_s
+
+
+class Reranker:
+    def __init__(self, params, cfg: P.PreTTRConfig, index: TermRepIndex,
+                 micro_batch: int = 32, deadline_s: float | None = None,
+                 cache_size: int = 64):
+        self.params = params
+        self.cfg = cfg
+        self.index = index
+        self.micro_batch = micro_batch
+        self.deadline_s = deadline_s
+        self._qcache: OrderedDict = OrderedDict()
+        self._cache_size = cache_size
+
+        self._encode = jax.jit(
+            lambda p, t, v: P.encode_query(p, cfg, t, v))
+        self._join = jax.jit(
+            lambda p, qr, qv, st, dv: P.join_and_score(p, cfg, qr, qv, st, dv))
+
+    # -- query side ----------------------------------------------------------
+    def _query_reps(self, q_tokens: np.ndarray, q_valid: np.ndarray):
+        key = (q_tokens.tobytes(), q_valid.tobytes())
+        if key in self._qcache:
+            self._qcache.move_to_end(key)
+            return self._qcache[key]
+        reps = self._encode(self.params, q_tokens[None], q_valid[None])
+        reps.block_until_ready()
+        self._qcache[key] = reps
+        if len(self._qcache) > self._cache_size:
+            self._qcache.popitem(last=False)
+        return reps
+
+    # -- scoring -------------------------------------------------------------
+    def _score_batch(self, q_reps, q_valid, doc_ids: Sequence[int],
+                     stats: RerankStats, depth: int = 0) -> np.ndarray:
+        t0 = time.perf_counter()
+        reps, dvalid = self.index.load_docs(doc_ids, pad_to=self.cfg.max_doc_len)
+        stats.load_s += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        n = len(doc_ids)
+        qr = jnp.broadcast_to(q_reps, (n, *q_reps.shape[1:]))
+        qv = jnp.broadcast_to(q_valid[None], (n, q_valid.shape[0]))
+        scores = self._join(self.params, qr, qv, jnp.asarray(reps),
+                            jnp.asarray(dvalid))
+        scores = np.asarray(jax.device_get(scores))
+        dt = time.perf_counter() - t0
+        stats.combine_s += dt
+
+        # straggler mitigation: split + re-dispatch an overshooting batch
+        if (self.deadline_s is not None and dt > self.deadline_s
+                and len(doc_ids) > 1 and depth < 2):
+            stats.n_redispatch += 1
+            mid = len(doc_ids) // 2
+            a = self._score_batch(q_reps, q_valid, doc_ids[:mid], stats, depth + 1)
+            b = self._score_batch(q_reps, q_valid, doc_ids[mid:], stats, depth + 1)
+            return np.concatenate([a, b])
+        return scores
+
+    def rerank(self, q_tokens: np.ndarray, q_valid: np.ndarray,
+               doc_ids: Sequence[int]):
+        """-> (doc_ids sorted by descending score, scores, stats)."""
+        stats = RerankStats(n_docs=len(doc_ids))
+        t0 = time.perf_counter()
+        q_reps = self._query_reps(q_tokens, q_valid)
+        stats.query_encode_s = time.perf_counter() - t0
+        q_valid_j = jnp.asarray(q_valid)
+
+        scores = []
+        ids = list(doc_ids)
+        # pad the tail so every microbatch has the same (jit-cached) shape
+        pad = (-len(ids)) % self.micro_batch
+        padded = ids + ids[:1] * pad
+        for i in range(0, len(padded), self.micro_batch):
+            chunk = padded[i: i + self.micro_batch]
+            scores.append(self._score_batch(q_reps, q_valid_j, chunk, stats))
+        scores = np.concatenate(scores)[: len(ids)]
+        order = np.argsort(-scores)
+        return [ids[i] for i in order], scores[order], stats

@@ -1,0 +1,59 @@
+"""Synthetic data world + metrics + samplers."""
+import numpy as np
+
+from repro.data.synthetic_ir import (SyntheticIRWorld, err_at_k, ndcg_at_k,
+                                     precision_at_k)
+from repro.data.tokenizer import CLS, SEP, HashTokenizer
+
+
+def test_world_statistics():
+    w = SyntheticIRWorld(n_docs=256, n_queries=16, vocab_size=1024,
+                         doc_len=64)
+    assert w.docs.shape == (256, 64)
+    qlens = [len(q) for q in w.queries]
+    assert set(qlens) <= {2, 3}                    # Table 2: 2-3 tokens
+    assert w.qrels.shape == (16, 256)
+    assert w.qrels.max() <= 2
+    # each query should have at least some candidates
+    cands = w.candidates(0, k=20)
+    assert len(cands) == 20
+
+
+def test_pair_batch_shapes():
+    w = SyntheticIRWorld(n_docs=128, n_queries=8, doc_len=32)
+    rng = np.random.default_rng(0)
+    pos, neg = w.pair_batch(rng, 4, max_query_len=8, max_doc_len=24)
+    for b in (pos, neg):
+        assert b["tokens"].shape == (4, 32)
+        assert b["segs"].shape == (4, 32)
+        assert b["valid"].dtype == bool
+        assert (b["tokens"][:, 0] == CLS).all()
+
+
+def test_car_pairs():
+    w = SyntheticIRWorld(n_docs=128, n_queries=8, doc_len=32)
+    rng = np.random.default_rng(0)
+    b = w.car_pairs(rng, 6, max_query_len=8, max_doc_len=24)
+    assert b["tokens"].shape == (6, 32)
+
+
+def test_metrics():
+    rels = np.asarray([2, 1, 0, 0, 2, 0, 0, 0, 0, 0])
+    assert precision_at_k(rels, 5) == 0.6
+    assert 0 < ndcg_at_k(rels, 10) < 1
+    assert 0 < err_at_k(rels, 10) < 1
+    # perfect ranking beats a bad one
+    assert ndcg_at_k(np.sort(rels)[::-1], 10) >= ndcg_at_k(rels, 10)
+    assert err_at_k(np.sort(rels)[::-1], 10) >= err_at_k(rels, 10)
+
+
+def test_hash_tokenizer_pair_packing():
+    tok = HashTokenizer(1000)
+    tokens, segs, valid = tok.encode_pair("what is jax", "jax is an autodiff"
+                                          " system for python", 8, 16)
+    assert len(tokens) == 24
+    assert tokens[0] == CLS
+    assert SEP in tokens
+    assert segs[:8] == [0] * 8 and segs[8:] == [1] * 16
+    # deterministic
+    assert tok.encode("hello world") == tok.encode("hello world")

@@ -1,0 +1,121 @@
+"""Kernel sweeps: every Pallas kernel vs its pure-jnp oracle, across shapes,
+dtypes, and mask configurations (interpret mode on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.split_attention import (split_flash_attention,
+                                           split_attention_ref)
+from repro.kernels.decode_attention import (flash_decode_attention,
+                                            decode_attention_ref)
+from repro.kernels.fused_compress import (fused_compress, fused_decompress,
+                                          compress_ref, decompress_ref)
+from repro.kernels.embedding_bag import (embedding_bag_pallas_op,
+                                         embedding_bag_ref)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,d,causal,window,boundary",
+    [
+        (2, 4, 2, 64, 32, False, -1, -1),     # GQA bidirectional
+        (2, 4, 2, 64, 32, True, -1, -1),      # causal
+        (1, 4, 4, 96, 64, True, 16, -1),      # sliding window
+        (2, 2, 2, 64, 32, False, -1, 32),     # PreTTR split, tile-aligned
+        (2, 2, 1, 80, 32, False, -1, 24),     # PreTTR split, off-tile
+        (1, 8, 8, 48, 128, True, 8, -1),      # window + causal, d=128
+    ])
+def test_split_attention_sweep(b, hq, hkv, sq, d, causal, window, boundary,
+                               dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sq, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sq, d), dtype)
+    lengths = jnp.asarray([sq, sq - 10][:b], jnp.int32)
+    out = split_flash_attention(q, k, v, lengths, causal=causal,
+                                window=window, seg_boundary=boundary,
+                                block_q=16, block_k=16)
+    ref = split_attention_ref(q, k, v, lengths, causal=causal, window=window,
+                              seg_boundary=boundary)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,s,d,window", [
+    (2, 8, 2, 256, 32, -1),
+    (2, 8, 2, 256, 32, 64),
+    (1, 4, 4, 512, 64, -1),
+    (3, 16, 8, 128, 64, 32),
+])
+def test_decode_attention_sweep(b, hq, hkv, s, d, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    lengths = jnp.asarray([s, s // 2, s - 7][:b], jnp.int32)
+    out = flash_decode_attention(q, k, v, lengths, window=window, block_k=64)
+    ref = decode_attention_ref(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("t,d,e", [(100, 64, 16), (256, 768, 128),
+                                   (33, 256, 384), (512, 768, 256)])
+def test_fused_compress_sweep(t, d, e):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (t, d))
+    w = jax.random.normal(ks[1], (d, e)) * 0.05
+    b = jax.random.normal(ks[2], (e,)) * 0.1
+    out = fused_compress(x, w, b, block_t=64)
+    ref = compress_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=1e-2,
+                               atol=1e-2)
+    wd = jax.random.normal(ks[3], (e, d)) * 0.05
+    bd = jax.random.normal(ks[4], (d,)) * 0.1
+    gamma, beta = jnp.ones((d,)), jnp.zeros((d,))
+    o2 = fused_decompress(out, wd, bd, gamma, beta, out_dtype=jnp.float32,
+                          block_t=64)
+    r2 = decompress_ref(out, wd, bd, gamma, beta)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(r2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_fused_decompress_matches_core_module():
+    """Kernel output == repro.core.compression.decompress (the serving path
+    swaps one for the other)."""
+    from repro.core.compression import init_compressor, compress, decompress
+    d, e = 64, 16
+    comp, _ = init_compressor(jax.random.PRNGKey(0), d, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (40, d))
+    r = compress(comp, x)
+    ref = decompress(comp, r, compute_dtype=jnp.float32)
+    out = fused_decompress(r, comp["w_decomp"], comp["b_decomp"],
+                           comp["ln"]["scale"], comp["ln"]["bias"],
+                           out_dtype=jnp.float32, block_t=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("rows,dim,nb,nnz,mode", [
+    (100, 16, 8, 4, "sum"),
+    (1000, 128, 16, 7, "mean"),
+    (64, 8, 3, 1, "sum"),
+])
+def test_embedding_bag_sweep(rows, dim, nb, nnz, mode):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    table = jax.random.normal(ks[0], (rows, dim))
+    ids = jax.random.randint(ks[1], (nb, nnz), 0, rows)
+    w = (jax.random.uniform(ks[2], (nb, nnz)) > 0.3).astype(jnp.float32)
+    out = embedding_bag_pallas_op(table, ids, w, mode=mode)
+    ref = embedding_bag_ref(table, ids, w, mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,69 @@
+"""Optimizer, schedules, gradient compression."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (OptimizerConfig, adam_update, init_opt_state,
+                         warmup_cosine, clip_by_global_norm)
+from repro.optim.compression import _dequantize, _quantize_int8, \
+    init_error_feedback
+
+
+def test_adam_converges_quadratic():
+    cfg = OptimizerConfig(lr=0.1, grad_clip=0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = init_opt_state(params, cfg)
+    target = jnp.asarray([1.0, 1.0])
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, opt, _ = adam_update(g, opt, params, cfg, lr=cfg.lr)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adam_mixed_precision_state_dtypes():
+    cfg = OptimizerConfig(m_dtype=jnp.bfloat16, keep_master=True)
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    opt = init_opt_state(params, cfg)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    assert opt["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4, 4), 0.5, jnp.bfloat16)}
+    p2, opt2, gn = adam_update(g, opt, params, cfg, lr=1e-2)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert float(gn) > 0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(gn) > 1.0
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(sched(jnp.asarray(s))) for s in range(0, 100, 10)]
+    assert lrs[0] < lrs[1]            # warming up
+    assert lrs[-1] < lrs[2]           # decaying
+    assert all(l > 0 for l in lrs)
+
+
+def test_int8_quantization_error_feedback():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    q, scale = _quantize_int8(x)
+    err = x - _dequantize(q, scale)
+    # bounded quantization error
+    assert float(jnp.max(jnp.abs(err))) <= float(scale) * 0.51 + 1e-6
+    # error feedback: accumulated residual keeps the long-run mean unbiased
+    fb = jnp.zeros_like(x)
+    total_deq = jnp.zeros_like(x)
+    for _ in range(50):
+        g = x  # constant gradient
+        q, s = _quantize_int8(g + fb)
+        deq = _dequantize(q, s)
+        fb = (g + fb) - deq
+        total_deq += deq
+    np.testing.assert_allclose(np.asarray(total_deq / 50), np.asarray(x),
+                               atol=1e-3)

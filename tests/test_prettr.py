@@ -1,0 +1,156 @@
+"""PreTTR core invariants — the properties that make the paper's technique
+sound."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prettr import (PreTTRConfig, make_backbone, init_prettr,
+                               rank_forward, precompute_docs, encode_query,
+                               join_and_score, rank_pairs_loss)
+from repro.core.compression import (init_compressor, compress, decompress,
+                                    attention_mse_loss, roundtrip)
+
+
+def _cfg(l=2, compress_dim=0, n_layers=4, store_dtype=jnp.float32):
+    bb = make_backbone(n_layers=n_layers, d_model=64, n_heads=4, d_ff=128,
+                       vocab_size=512, l=l, max_len=64,
+                       compute_dtype=jnp.float32, block_kv=16, remat_block=2)
+    return PreTTRConfig(backbone=bb, l=l, max_query_len=8, max_doc_len=24,
+                        compress_dim=compress_dim, store_dtype=store_dtype)
+
+
+def _inputs(key, cfg, batch=3):
+    kq, kd, kv = jax.random.split(key, 3)
+    q = jax.random.randint(kq, (batch, cfg.max_query_len), 5, 512)
+    d = jax.random.randint(kd, (batch, cfg.max_doc_len), 5, 512)
+    q_len = jax.random.randint(kv, (batch, 1), 3, cfg.max_query_len + 1)
+    d_len = jax.random.randint(kv, (batch, 1), 5, cfg.max_doc_len + 1)
+    q_valid = jnp.arange(cfg.max_query_len)[None] < q_len
+    d_valid = jnp.arange(cfg.max_doc_len)[None] < d_len
+    tokens = jnp.concatenate([q, d], axis=1)
+    segs = jnp.concatenate(
+        [jnp.zeros((batch, cfg.max_query_len), jnp.int32),
+         jnp.ones((batch, cfg.max_doc_len), jnp.int32)], axis=1)
+    valid = jnp.concatenate([q_valid, d_valid], axis=1)
+    return q, d, q_valid, d_valid, tokens, segs, valid
+
+
+@pytest.mark.parametrize("l", [0, 1, 2, 3])
+@pytest.mark.parametrize("compress_dim", [0, 16])
+def test_joint_equals_split(l, compress_dim):
+    """THE PreTTR invariant: joint split-mask forward == precompute + join."""
+    cfg = _cfg(l=l, compress_dim=compress_dim,
+               store_dtype=jnp.float32 if not compress_dim else jnp.float16)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    q, d, qv, dv, tokens, segs, valid = _inputs(jax.random.PRNGKey(1), cfg)
+    s_joint = rank_forward(params, cfg, tokens, segs, valid)
+    store = precompute_docs(params, cfg, d, dv)
+    q_reps = encode_query(params, cfg, q, qv)
+    s_split = join_and_score(params, cfg, q_reps, qv, store, dv)
+    tol = 1e-4 if not compress_dim else 5e-3   # fp16 store rounding
+    np.testing.assert_allclose(np.asarray(s_joint), np.asarray(s_split),
+                               rtol=tol, atol=tol)
+
+
+def test_doc_reps_query_independent():
+    """Precomputed doc reps cannot depend on any query (they never see one).
+    Equivalent joint forwards with different queries must agree on scores
+    computed from the same stored reps."""
+    cfg = _cfg(l=2)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    q1, d, qv, dv, *_ = _inputs(jax.random.PRNGKey(1), cfg)
+    q2 = jax.random.randint(jax.random.PRNGKey(9), q1.shape, 5, 512)
+    store = precompute_docs(params, cfg, d, dv)
+    s1 = join_and_score(params, cfg, encode_query(params, cfg, q1, qv), qv,
+                        store, dv)
+    s2 = join_and_score(params, cfg, encode_query(params, cfg, q2, qv), qv,
+                        store, dv)
+    # different queries -> different scores (sanity the join isn't constant)
+    assert not np.allclose(np.asarray(s1), np.asarray(s2))
+
+
+def test_pad_content_invariance():
+    """Token ids under valid=False must not influence the score."""
+    cfg = _cfg(l=2)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    q, d, qv, dv, tokens, segs, valid = _inputs(jax.random.PRNGKey(1), cfg)
+    s1 = rank_forward(params, cfg, tokens, segs, valid)
+    garbage = jax.random.randint(jax.random.PRNGKey(7), tokens.shape, 5, 512)
+    tokens2 = jnp.where(valid, tokens, garbage)
+    s2 = rank_forward(params, cfg, tokens2, segs, valid)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_cls_only_equals_full_last_layer():
+    cfg = _cfg(l=2)
+    cfg_full = dataclasses.replace(cfg, cls_only_last_layer=False)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    *_, tokens, segs, valid = _inputs(jax.random.PRNGKey(1), cfg)
+    s_cls = rank_forward(params, cfg, tokens, segs, valid)
+    s_full = rank_forward(params, cfg_full, tokens, segs, valid)
+    np.testing.assert_allclose(np.asarray(s_cls), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_loss_trains():
+    cfg = _cfg(l=1)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    *_, tokens, segs, valid = _inputs(jax.random.PRNGKey(1), cfg)
+    pos = {"tokens": tokens, "segs": segs, "valid": valid}
+    neg = {"tokens": jnp.roll(tokens, 1, 0), "segs": segs,
+           "valid": jnp.roll(valid, 1, 0)}
+    loss_fn = lambda p: rank_pairs_loss(p, cfg, pos, neg)
+    l0, g = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(l0))
+    # gradient is a descent direction for a small enough step
+    p2 = jax.tree.map(lambda p, gg: p - 1e-3 * gg, params, g)
+    l1 = loss_fn(p2)
+    assert float(l1) < float(l0), (float(l0), float(l1))
+
+
+def test_compression_shapes_and_distillation():
+    d, e = 64, 16
+    comp, _ = init_compressor(jax.random.PRNGKey(0), d, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 10, d))
+    r = compress(comp, x)
+    assert r.shape == (3, 10, e) and r.dtype == jnp.float16
+    y = decompress(comp, r, compute_dtype=jnp.float32)
+    assert y.shape == x.shape
+
+    bb = make_backbone(n_layers=3, d_model=d, n_heads=4, d_ff=128,
+                       vocab_size=256, l=1, max_len=32,
+                       compute_dtype=jnp.float32)
+    from repro.models.transformer import init_params
+    params, _ = init_params(jax.random.PRNGKey(2), bb)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 5, 256)
+    loss_fn = lambda cp: attention_mse_loss(params, cp, bb, toks, l=1)
+    l0, g = jax.value_and_grad(loss_fn)(comp)
+    comp2 = jax.tree.map(lambda p, gg: p - 2.0 * gg, comp, g)
+    assert loss_fn(comp2) < l0, "distillation step must reduce attention MSE"
+
+
+@settings(max_examples=10, deadline=None)
+@given(l=st.integers(0, 3), batch=st.integers(1, 4),
+       doc_len=st.sampled_from([16, 24]), seed=st.integers(0, 2**16))
+def test_property_joint_equals_split(l, batch, doc_len, seed):
+    """Property: invariant holds across random shapes/seeds/lengths."""
+    bb = make_backbone(n_layers=4, d_model=32, n_heads=2, d_ff=64,
+                       vocab_size=128, l=l, max_len=8 + doc_len,
+                       compute_dtype=jnp.float32, block_kv=8)
+    cfg = PreTTRConfig(backbone=bb, l=l, max_query_len=8, max_doc_len=doc_len,
+                       compress_dim=0, store_dtype=jnp.float32)
+    params, _ = init_prettr(jax.random.PRNGKey(seed), cfg)
+    q, d, qv, dv, tokens, segs, valid = _inputs(jax.random.PRNGKey(seed + 1),
+                                                cfg, batch=batch)
+    s_joint = rank_forward(params, cfg, tokens, segs, valid)
+    store = precompute_docs(params, cfg, d, dv)
+    s_split = join_and_score(params, cfg, encode_query(params, cfg, q, qv),
+                             qv, store, dv)
+    np.testing.assert_allclose(np.asarray(s_joint), np.asarray(s_split),
+                               rtol=2e-4, atol=2e-4)
