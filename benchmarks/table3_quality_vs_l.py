@@ -14,7 +14,7 @@ import numpy as np
 
 from benchmarks.common import (N_LAYERS, eval_ranker, make_cfg, make_world,
                                train_ranker)
-from repro.data.synthetic_ir import err_at_k, ndcg_at_k, precision_at_k
+from repro.data.synthetic_ir import err_at_k, precision_at_k
 
 
 def run(steps: int = 40) -> list[dict]:

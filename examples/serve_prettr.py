@@ -1,7 +1,9 @@
 """Serving example: build a PreTTR index then serve re-ranking traffic,
 reporting the Table-5-style phase breakdown (query / load / combine).
 
-Run: PYTHONPATH=src python examples/serve_prettr.py
+Run: PYTHONPATH=src python examples/serve_prettr.py [--n-docs N ...]
+Command-line flags override the example defaults (argparse keeps the last
+occurrence), so e.g. ``--n-docs 64 --n-queries 2`` gives a quick smoke run.
 """
 import sys
 
@@ -9,5 +11,6 @@ from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
     sys.argv = ["serve", "--l", "2", "--compress-dim", "16",
-                "--n-docs", "256", "--n-queries", "8", "--candidates", "64"]
+                "--n-docs", "256", "--n-queries", "8", "--candidates", "64",
+                *sys.argv[1:]]
     serve_main()

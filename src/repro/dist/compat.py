@@ -1,0 +1,26 @@
+"""Version shims for the jax sharding surface.
+
+The tree is written against the modern spelling (``jax.shard_map`` with a
+``check_vma`` kwarg, ``jax.P``); older jaxlibs ship the same machinery under
+``jax.experimental.shard_map`` with ``check_rep``.  Import ``shard_map`` /
+``P`` from here instead of from ``jax`` directly.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: F401
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None,
+                  **kwargs):
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        if f is None:
+            return lambda g: _shard_map(g, mesh=mesh, in_specs=in_specs,
+                                        out_specs=out_specs, **kwargs)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)

@@ -1,0 +1,74 @@
+"""Ambient sharding-rule context.
+
+Step functions run under ``install_rules(rules)``; model code deep in the
+call stack asks :func:`current_rules` / :func:`maybe_shard` instead of
+threading a mesh through every signature.  Outside any installed rules (unit
+tests, the single-device serving path) every hook is a no-op, so the same
+model code runs unmodified on one device.
+
+This module must never touch jax device state at import time (no
+``jax.devices()``) — same convention as ``launch/mesh.py``: the smoke tests
+must see one device while the dry-run sees 512 placeholders.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.dist.sharding import ShardingRules, divisible_spec
+
+_STATE = threading.local()
+
+
+def _stack() -> list:
+    st = getattr(_STATE, "stack", None)
+    if st is None:
+        st = _STATE.stack = []
+    return st
+
+
+def current_rules() -> ShardingRules | None:
+    """The innermost installed :class:`ShardingRules`, or None."""
+    st = _stack()
+    return st[-1] if st else None
+
+
+@contextlib.contextmanager
+def install_rules(rules: ShardingRules):
+    """Install ``rules`` as the ambient sharding rules (re-entrant; restores
+    the previous rules on exit, even on error)."""
+    st = _stack()
+    st.append(rules)
+    try:
+        yield rules
+    finally:
+        st.pop()
+
+
+def _ambient_mesh_conflicts(mesh) -> bool:
+    """True when a *different* physical mesh context is active — a constraint
+    against ``mesh`` could not be honored there."""
+    try:
+        from jax._src.mesh import thread_resources
+        ambient = thread_resources.env.physical_mesh
+    except Exception:
+        return False
+    return not ambient.empty and ambient != mesh
+
+
+def maybe_shard(x, logical_axes):
+    """``with_sharding_constraint(x, rules[logical_axes])`` when rules are
+    installed and their mesh is usable here; ``x`` unchanged otherwise."""
+    rules = current_rules()
+    if rules is None or rules.mesh.size <= 1:
+        return x
+    if _ambient_mesh_conflicts(rules.mesh):
+        return x
+    spec = divisible_spec(rules, logical_axes, x.shape)
+    if all(p is None for p in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

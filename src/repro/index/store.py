@@ -47,6 +47,10 @@ class TermRepIndex:
             self._n_tokens += int(n)
 
     def finalize(self):
+        if self._write_handle is None:
+            if self._offsets:         # 'wb' reopen would truncate reps.bin
+                raise RuntimeError("finalize() on an already-finalized index")
+            self._open_write()        # zero-doc index still gets a valid layout
         self._write_handle.flush()
         os.fsync(self._write_handle.fileno())
         self._write_handle.close()
@@ -67,8 +71,12 @@ class TermRepIndex:
                   meta["compressed"], meta["max_doc_len"])
         idx._offsets = [tuple(o) for o in meta["offsets"]]
         idx._n_tokens = sum(n for _, n in idx._offsets)
-        idx._mmap = np.memmap(os.path.join(path, "reps.bin"), dtype=idx.dtype,
-                              mode="r", shape=(idx._n_tokens, idx.rep_dim))
+        if idx._n_tokens:
+            idx._mmap = np.memmap(os.path.join(path, "reps.bin"),
+                                  dtype=idx.dtype, mode="r",
+                                  shape=(idx._n_tokens, idx.rep_dim))
+        else:                         # np.memmap rejects empty files
+            idx._mmap = np.zeros((0, idx.rep_dim), idx.dtype)
         return idx
 
     def __len__(self):
@@ -77,7 +85,7 @@ class TermRepIndex:
     def load_docs(self, doc_ids: Sequence[int], pad_to: int | None = None):
         """-> (reps [N, Ld, e], valid [N, Ld]) padded batch for join_and_score."""
         pad_to = pad_to or self.max_doc_len or max(
-            self._offsets[d][1] for d in doc_ids)
+            (self._offsets[d][1] for d in doc_ids), default=1)
         out = np.zeros((len(doc_ids), pad_to, self.rep_dim), self.dtype)
         valid = np.zeros((len(doc_ids), pad_to), bool)
         for i, d in enumerate(doc_ids):

@@ -8,11 +8,7 @@ useful-compute ratio against HLO FLOPs.
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
-from typing import Any, Callable
-
-import numpy as np
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

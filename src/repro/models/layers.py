@@ -6,7 +6,6 @@ normalization statistics; parameters are kept in ``cfg.param_dtype``.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

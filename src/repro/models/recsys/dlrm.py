@@ -13,7 +13,7 @@ recsys.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import numpy as np
 

@@ -103,7 +103,7 @@ def sharded_lookup(table, flat_ids, mesh, *, capacity_factor: float = 4.0):
     Over-capacity ids (Zipf skew) fall back to row 0 with a zero mask —
     sized by ``capacity_factor`` over the uniform expectation.
     """
-    shard_map = jax.shard_map
+    from repro.dist.compat import NamedSharding, P, shard_map
 
     n = flat_ids.shape[0]
     r, d = table.shape
@@ -125,7 +125,7 @@ def sharded_lookup(table, flat_ids, mesh, *, capacity_factor: float = 4.0):
         lambda ii: _bucket_group(ii, n_shards, rows_per, capacity))(ids_g)
     # ids all-to-all: group-major -> owner-major
     bucket = jax.lax.with_sharding_constraint(
-        bucket, jax.NamedSharding(mesh, jax.P(None, axes, None)))
+        bucket, NamedSharding(mesh, P(None, axes, None)))
 
     def _owner_gather(table_local, bucket_local):
         # table_local: [rows_per, D]; bucket_local: [G, 1, C] (my column)
@@ -139,13 +139,13 @@ def sharded_lookup(table, flat_ids, mesh, *, capacity_factor: float = 4.0):
 
     vecs = shard_map(
         _owner_gather, mesh=mesh,
-        in_specs=(jax.P(axes, None), jax.P(None, axes, None)),
-        out_specs=jax.P(None, axes, None, None),
+        in_specs=(P(axes, None), P(None, axes, None)),
+        out_specs=P(None, axes, None, None),
         check_vma=False,
     )(table, bucket)
     # vector all-to-all: owner-major -> group-major
     vecs = jax.lax.with_sharding_constraint(
-        vecs, jax.NamedSharding(mesh, jax.P(g_axes or None, None, None, None)))
+        vecs, NamedSharding(mesh, P(g_axes or None, None, None, None)))
     out = jax.vmap(lambda v, o, s: v[o, s])(vecs, owner, slot)   # [G, Ng, D]
     out = out * keep[..., None].astype(out.dtype)
     return out.reshape(n, d)

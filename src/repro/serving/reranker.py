@@ -103,6 +103,8 @@ class Reranker:
                doc_ids: Sequence[int]):
         """-> (doc_ids sorted by descending score, scores, stats)."""
         stats = RerankStats(n_docs=len(doc_ids))
+        if not len(doc_ids):          # nothing to rank; keep shapes consistent
+            return [], np.zeros((0,), np.float32), stats
         t0 = time.perf_counter()
         q_reps = self._query_reps(q_tokens, q_valid)
         stats.query_encode_s = time.perf_counter() - t0

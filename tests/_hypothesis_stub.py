@@ -1,0 +1,56 @@
+"""Deterministic stand-in for the small hypothesis surface the suite uses
+(``given`` + ``settings`` + ``sampled_from`` / ``booleans`` / ``integers``),
+for environments without hypothesis installed.  Each ``@given`` test runs
+``max_examples`` times with values drawn from a fixed-seed RNG — a property
+sweep, minus shrinking."""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def settings(max_examples: int = 8, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_stub_max_examples", 8)
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        del run.__wrapped__
+        sig = inspect.signature(fn)
+        run.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        return run
+    return deco

@@ -50,7 +50,7 @@ def test_lm_smoke_decode_step(arch):
 
 def test_dimenet_smoke():
     from repro.data.graphs import make_graph_batch, make_molecule_batch
-    from repro.models.gnn.dimenet import (DimeNetConfig, init_dimenet,
+    from repro.models.gnn.dimenet import (init_dimenet,
                                           dimenet_forward, node_cls_loss,
                                           energy_loss)
     import dataclasses

@@ -8,7 +8,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -17,7 +16,9 @@ def _run(snippet: str):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # the forced host devices *are* CPU devices; pin the platform so jax
+    # never probes for accelerators (TPU metadata probing hangs in CI)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
                          capture_output=True, text=True, env=env,
                          timeout=420)
@@ -115,7 +116,8 @@ def test_sharded_transformer_matches_single_device():
 def test_compressed_psum_pod_axis():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.compat import shard_map
     from repro.optim.compression import compressed_psum, init_error_feedback
 
     mesh = jax.make_mesh((8,), ("pod",))
@@ -126,9 +128,9 @@ def test_compressed_psum_pod_axis():
         out, new_e = compressed_psum(g, e, "pod")
         return out, new_e
 
-    sm = jax.shard_map(f, mesh=mesh,
-                       in_specs=(P("pod", None), P("pod", None)),
-                       out_specs=(P("pod", None), P("pod", None)))
+    sm = shard_map(f, mesh=mesh,
+                   in_specs=(P("pod", None), P("pod", None)),
+                   out_specs=(P("pod", None), P("pod", None)))
     with mesh:
         out, new_fb = jax.jit(sm)(grads, {"w": jnp.zeros((8, 64))})
     # compressed mean-psum approximates the true mean across the pod axis

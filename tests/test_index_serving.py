@@ -88,3 +88,41 @@ def test_reranker_straggler_redispatch(tmp_path):
     ranked, scores, stats = rr.rerank(q, np.ones((8,), bool), list(range(8)))
     assert stats.n_redispatch > 0, "0s deadline must trigger re-dispatch"
     assert len(ranked) == 8
+
+
+def test_rerank_empty_doc_ids(tmp_path):
+    """Regression: rerank([]) used to hit np.concatenate on an empty list."""
+    cfg, params, docs, valid, lengths = _setup(tmp_path)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    rr = Reranker(params, cfg, idx, micro_batch=4)
+    q = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (8,), 5, 128))
+    ranked, scores, stats = rr.rerank(q, np.ones((8,), bool), [])
+    assert ranked == []
+    assert scores.shape == (0,)
+    assert stats.n_docs == 0
+
+
+def test_zero_doc_index_roundtrip(tmp_path):
+    """Regression: finalize()/open() used to crash on an index with no docs
+    (unopened write handle; np.memmap rejects empty files)."""
+    idx = TermRepIndex(str(tmp_path / "empty"), rep_dim=16, dtype="float16",
+                       l=1, compressed=True, max_doc_len=16)
+    idx.finalize()
+    idx = TermRepIndex.open(str(tmp_path / "empty"))
+    assert len(idx) == 0
+    assert idx.storage_bytes() == 0
+    reps, dvalid = idx.load_docs([], pad_to=16)
+    assert reps.shape == (0, 16, 16) and dvalid.shape == (0, 16)
+
+
+def test_empty_index_and_empty_rerank_together(tmp_path):
+    cfg, params, docs, valid, lengths = _setup(tmp_path)
+    empty = TermRepIndex(str(tmp_path / "empty2"), rep_dim=16,
+                         dtype="float16", l=1, compressed=True,
+                         max_doc_len=16)
+    empty.finalize()
+    empty = TermRepIndex.open(str(tmp_path / "empty2"))
+    rr = Reranker(params, cfg, empty, micro_batch=4)
+    q = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (8,), 5, 128))
+    ranked, scores, _ = rr.rerank(q, np.ones((8,), bool), [])
+    assert ranked == [] and scores.shape == (0,)

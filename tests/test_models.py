@@ -3,8 +3,10 @@ attention equivalence (incl. hypothesis sweep)."""
 import dataclasses
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # minimal deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp

@@ -6,8 +6,7 @@ import jax.numpy as jnp
 
 from repro.optim import (OptimizerConfig, adam_update, init_opt_state,
                          warmup_cosine, clip_by_global_norm)
-from repro.optim.compression import _dequantize, _quantize_int8, \
-    init_error_feedback
+from repro.optim.compression import _dequantize, _quantize_int8
 
 
 def test_adam_converges_quadratic():

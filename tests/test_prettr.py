@@ -4,7 +4,10 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # minimal deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +16,7 @@ from repro.core.prettr import (PreTTRConfig, make_backbone, init_prettr,
                                rank_forward, precompute_docs, encode_query,
                                join_and_score, rank_pairs_loss)
 from repro.core.compression import (init_compressor, compress, decompress,
-                                    attention_mse_loss, roundtrip)
+                                    attention_mse_loss)
 
 
 def _cfg(l=2, compress_dim=0, n_layers=4, store_dtype=jnp.float32):

@@ -51,7 +51,7 @@ def trained(world, cfg, tmp_path_factory):
         return params, opt, loss
 
     losses = []
-    for i in range(30):
+    for i in range(60):
         pos, neg = world.pair_batch(rng, 16, MAX_Q, MAX_D)
         pos = jax.tree.map(jnp.asarray, pos)
         neg = jax.tree.map(jnp.asarray, neg)
@@ -64,7 +64,9 @@ def trained(world, cfg, tmp_path_factory):
 
 def test_training_reduces_loss(trained):
     _, losses, _, _ = trained
-    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+    # windowed means: single-batch pairwise losses are noisy on the tiny
+    # synthetic world, but the trend over 60 steps is unambiguous
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), losses
 
 
 def test_checkpoint_restart_resumes(trained, cfg):
