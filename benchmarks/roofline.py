@@ -60,15 +60,16 @@ def fmt_s(x: float) -> str:
 def report(results_dir: str = "results/dryrun") -> str:
     rows = load(results_dir)
     out = []
-    out.append("| arch | shape | compute | memory | collective | dominant | "
-               "MODEL/HLO flops | roofline frac | peak GiB/dev |")
-    out.append("|---|---|---|---|---|---|---|---|---|")
+    out.append("| arch | shape | backend | compute | memory | collective | "
+               "dominant | MODEL/HLO flops | roofline frac | peak GiB/dev |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
     for r in rows:
         t = r["roofline"]
         ratio = r.get("useful_compute_ratio")
         frac = r.get("roofline_fraction")
         out.append(
-            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"| {r['arch']} | {r['shape']} | {r.get('backend', 'default')} | "
+            f"{fmt_s(t['compute_s'])} | "
             f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
             f"{r['dominant_term'].replace('_s','')} | "
             f"{ratio and format(ratio, '.3f')} | "
@@ -85,7 +86,15 @@ def report(results_dir: str = "results/dryrun") -> str:
 
 
 def main() -> None:
-    print(report())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results-dir", default="results/dryrun",
+                    help="dry-run output dir; produce per-backend dirs with "
+                         "`repro.launch.dryrun --backend pallas --out ...` "
+                         "and report each to compare backends")
+    args = ap.parse_args()
+    print(report(args.results_dir))
 
 
 if __name__ == "__main__":

@@ -7,17 +7,31 @@ layer) — the exact phase split of Table 5 — plus the speedup over the base
 reproduce the paper's structure (cost ~ (n-l)/n with an extra kick at
 l=n-1 from the CLS-only last layer; paper: 42x at l=11/12 layers).
 
+``--backend {plain,blocked,pallas}`` routes every phase through the chosen
+compute backend (``repro.models.backend``), so the Query/Decompress/Combine
+split can be compared per backend; off-TPU "pallas" runs the kernels in
+interpret mode (slow in absolute terms — use the size flags for smokes).
+
 A bigger backbone than the quality benchmarks is used so compute dominates
 dispatch overhead.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
 
+if __package__ in (None, ""):            # `python benchmarks/table5_latency.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)                      # benchmarks.*
+    sys.path.insert(0, os.path.join(_root, "src"))  # repro.* sans install
+
 from benchmarks.common import timer
 from repro.core.compression import decompress
+from repro.models.backend import impls_for
 from repro.core.prettr import (PreTTRConfig, encode_query, init_prettr,
                                join_and_score, make_backbone, precompute_docs,
                                rank_forward)
@@ -28,74 +42,107 @@ MAX_Q, MAX_D = 16, 112
 N_DOCS = 100
 
 
-def run() -> list[dict]:
+def run(backend: str = "blocked", n_layers: int = N_LAYERS,
+        d_model: int = D_MODEL, n_docs: int = N_DOCS,
+        max_q: int = MAX_Q, max_d: int = MAX_D,
+        max_l: int | None = None) -> list[dict]:
+    attn_impl, compress_impl = impls_for(backend)
     rows = []
     key = jax.random.PRNGKey(0)
-    q = jax.random.randint(key, (1, MAX_Q), 5, 1000)
-    qv = jnp.ones((1, MAX_Q), bool)
-    docs = jax.random.randint(key, (N_DOCS, MAX_D), 5, 1000)
-    dv = jnp.ones((N_DOCS, MAX_D), bool)
-    tokens = jnp.concatenate([jnp.broadcast_to(q, (N_DOCS, MAX_Q)), docs], 1)
-    segs = jnp.concatenate([jnp.zeros((N_DOCS, MAX_Q), jnp.int32),
-                            jnp.ones((N_DOCS, MAX_D), jnp.int32)], 1)
-    valid = jnp.concatenate([jnp.broadcast_to(qv, (N_DOCS, MAX_Q)), dv], 1)
+    q = jax.random.randint(key, (1, max_q), 5, 1000)
+    qv = jnp.ones((1, max_q), bool)
+    docs = jax.random.randint(key, (n_docs, max_d), 5, 1000)
+    dv = jnp.ones((n_docs, max_d), bool)
+    tokens = jnp.concatenate([jnp.broadcast_to(q, (n_docs, max_q)), docs], 1)
+    segs = jnp.concatenate([jnp.zeros((n_docs, max_q), jnp.int32),
+                            jnp.ones((n_docs, max_d), jnp.int32)], 1)
+    valid = jnp.concatenate([jnp.broadcast_to(qv, (n_docs, max_q)), dv], 1)
 
     base_s = None
-    for l in range(N_LAYERS):
-        e = D_MODEL // 4
-        bb = make_backbone(n_layers=N_LAYERS, d_model=D_MODEL, n_heads=8,
-                           d_ff=4 * D_MODEL, vocab_size=1024, l=l,
-                           max_len=MAX_Q + MAX_D,
-                           compute_dtype=jnp.float32, block_kv=64)
-        cfg = PreTTRConfig(backbone=bb, l=l, max_query_len=MAX_Q,
-                           max_doc_len=MAX_D, compress_dim=e)
+    stop = n_layers if max_l is None else min(n_layers, max_l + 1)
+    for l in range(stop):
+        e = d_model // 4
+        bb = make_backbone(n_layers=n_layers, d_model=d_model, n_heads=8,
+                           d_ff=4 * d_model, vocab_size=1024, l=l,
+                           max_len=max_q + max_d,
+                           compute_dtype=jnp.float32, block_kv=64,
+                           attn_impl=attn_impl, compress_impl=compress_impl)
+        cfg = PreTTRConfig(backbone=bb, l=l, max_query_len=max_q,
+                           max_doc_len=max_d, compress_dim=e)
         params, _ = init_prettr(jax.random.PRNGKey(1), cfg)
 
         if l == 0:
-            # base model: full joint forward over 100 candidates
+            # base model: full joint forward over the candidates
             f = jax.jit(lambda p: rank_forward(p, cfg, tokens, segs, valid))
             total = timer(f, params)
             base_s = total
-            rows.append({"l": 0, "total_s": total, "speedup": 1.0,
-                         "query_ms": None, "decompress_ms": None,
-                         "combine_ms": None})
-            print(f"[table5] base (l=0): {total*1e3:.1f} ms / 100 docs")
+            rows.append({"l": 0, "backend": backend, "total_s": total,
+                         "speedup": 1.0, "query_ms": None,
+                         "decompress_ms": None, "combine_ms": None})
+            print(f"[table5] {backend} base (l=0): {total*1e3:.1f} ms / "
+                  f"{n_docs} docs")
             continue
 
         store = precompute_docs(params, cfg, docs, dv)   # index time (free)
         enc = jax.jit(lambda p: encode_query(p, cfg, q, qv))
         t_query = timer(enc, params)
         q_reps = enc(params)
-        dec = jax.jit(lambda c, s: decompress(c, s,
-                                              compute_dtype=jnp.float32))
+        dec = jax.jit(lambda c, s: decompress(c, s, compute_dtype=jnp.float32,
+                                              impl=compress_impl))
         t_dec = timer(dec, params["compressor"], store)
         d_reps = dec(params["compressor"], store)
 
         def _join(p, qr, dr):
             # measure the combine phase on already-decompressed reps by
             # using an uncompressed-config view of the same weights
-            cfg_nc = PreTTRConfig(backbone=bb, l=l, max_query_len=MAX_Q,
-                                  max_doc_len=MAX_D, compress_dim=0,
+            cfg_nc = PreTTRConfig(backbone=bb, l=l, max_query_len=max_q,
+                                  max_doc_len=max_d, compress_dim=0,
                                   store_dtype=jnp.float32)
             return join_and_score({k: v for k, v in p.items()
                                    if k != "compressor"},
                                   cfg_nc,
-                                  jnp.broadcast_to(qr, (N_DOCS, MAX_Q,
-                                                        D_MODEL)),
-                                  jnp.broadcast_to(qv, (N_DOCS, MAX_Q)),
+                                  jnp.broadcast_to(qr, (n_docs, max_q,
+                                                        d_model)),
+                                  jnp.broadcast_to(qv, (n_docs, max_q)),
                                   dr, dv)
 
         joinf = jax.jit(_join)
         t_comb = timer(joinf, params, q_reps, d_reps)
         total = t_query + t_dec + t_comb
-        rows.append({"l": l, "total_s": total, "speedup": base_s / total,
+        rows.append({"l": l, "backend": backend, "total_s": total,
+                     "speedup": base_s / total,
                      "query_ms": t_query * 1e3, "decompress_ms": t_dec * 1e3,
                      "combine_ms": t_comb * 1e3})
-        print(f"[table5] l={l}: total={total*1e3:.1f}ms "
+        print(f"[table5] {backend} l={l}: total={total*1e3:.1f}ms "
               f"(query={t_query*1e3:.1f} decomp={t_dec*1e3:.1f} "
               f"combine={t_comb*1e3:.1f}) speedup={base_s/total:.1f}x")
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="blocked",
+                    choices=["plain", "blocked", "pallas"],
+                    help="compute backend for every phase")
+    ap.add_argument("--layers", type=int, default=N_LAYERS)
+    ap.add_argument("--d-model", type=int, default=D_MODEL)
+    ap.add_argument("--docs", type=int, default=N_DOCS)
+    ap.add_argument("--max-l", type=int, default=None,
+                    help="stop the l sweep at this split (smoke runs)")
+    args = ap.parse_args()
+    sizes = dict(n_layers=args.layers, d_model=args.d_model,
+                 n_docs=args.docs, max_l=args.max_l)
+    if (args.backend == "pallas" and jax.default_backend() != "tpu"
+            and (args.layers, args.d_model, args.docs)
+            == (N_LAYERS, D_MODEL, N_DOCS)):
+        # interpret mode is ~2 orders slower than compiled XLA; keep the
+        # default off-TPU sweep tractable (explicit size flags force full)
+        print("[table5] pallas off-TPU -> interpret mode: scaling sweep to "
+              "layers=4 d_model=64 docs=32 (pass --layers/--d-model/--docs "
+              "to override)")
+        sizes.update(n_layers=4, d_model=64, n_docs=32)
+    run(backend=args.backend, **sizes)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -8,22 +8,27 @@ from repro.core.prettr import PreTTRConfig, make_backbone
 
 
 def full_config(l: int = 6, compress_dim: int = 256,
-                max_query_len: int = 32, max_doc_len: int = 480) -> PreTTRConfig:
+                max_query_len: int = 32, max_doc_len: int = 480,
+                attn_impl: str = "blocked",
+                compress_impl: str = "plain") -> PreTTRConfig:
     return PreTTRConfig(
         backbone=make_backbone(
             n_layers=12, d_model=768, n_heads=12, d_ff=3072,
             vocab_size=30522, l=l, max_len=max_query_len + max_doc_len,
-            compute_dtype=jnp.bfloat16, remat_block=2, block_kv=128),
+            compute_dtype=jnp.bfloat16, remat_block=2, block_kv=128,
+            attn_impl=attn_impl, compress_impl=compress_impl),
         l=l, max_query_len=max_query_len, max_doc_len=max_doc_len,
         compress_dim=compress_dim)
 
 
-def smoke_config(l: int = 2, compress_dim: int = 16) -> PreTTRConfig:
+def smoke_config(l: int = 2, compress_dim: int = 16,
+                 attn_impl: str = "blocked",
+                 compress_impl: str = "plain") -> PreTTRConfig:
     return PreTTRConfig(
         backbone=make_backbone(
             n_layers=4, d_model=64, n_heads=4, d_ff=128, vocab_size=512,
             l=l, max_len=48, compute_dtype=jnp.float32, remat_block=2,
-            block_kv=16),
+            block_kv=16, attn_impl=attn_impl, compress_impl=compress_impl),
         l=l, max_query_len=8, max_doc_len=40, compress_dim=compress_dim)
 
 

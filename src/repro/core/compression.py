@@ -40,26 +40,45 @@ def init_compressor(key, d: int, e: int, dtype=jnp.float32):
     return params, axes
 
 
-def compress(params: dict, s_l, *, store_dtype=jnp.float16):
-    """[..., d] -> [..., e] stored representation (fp16 by default —
-    the paper's 16-bit trick, §6.2)."""
+def compress_jnp(params: dict, s_l, *, store_dtype=jnp.float16):
+    """Pure-jnp compress: [..., d] -> [..., e] stored representation (fp16
+    by default — the paper's 16-bit trick, §6.2).  The "plain" backend."""
     r = jax.nn.gelu(s_l @ params["w_comp"].astype(s_l.dtype)
                     + params["b_comp"].astype(s_l.dtype))
     return r.astype(store_dtype)
 
 
-def decompress(params: dict, r, *, compute_dtype=jnp.bfloat16):
-    """[..., e] -> [..., d]; fuses the fp16 upcast with the expansion."""
+def decompress_jnp(params: dict, r, *, compute_dtype=jnp.bfloat16):
+    """Pure-jnp decompress: [..., e] -> [..., d]; fuses the fp16 upcast
+    with the expansion.  The "plain" backend."""
     r = r.astype(compute_dtype)
     s_hat = r @ params["w_decomp"].astype(compute_dtype) \
         + params["b_decomp"].astype(compute_dtype)
     return L.layer_norm(s_hat, params["ln"]["scale"], params["ln"]["bias"])
 
 
+def compress(params: dict, s_l, *, store_dtype=jnp.float16, impl="plain"):
+    """[..., d] -> [..., e], dispatched through the compute-backend
+    registry: ``impl`` in {"plain", "pallas"} (``fused_compress`` fuses the
+    matmul + GELU + fp16 downcast in one VMEM pass)."""
+    from repro.models import backend as B
+    return B.get_impl("compress", impl)(params, s_l, store_dtype=store_dtype)
+
+
+def decompress(params: dict, r, *, compute_dtype=jnp.bfloat16, impl="plain"):
+    """[..., e] -> [..., d], dispatched through the compute-backend
+    registry (Table 5's "Decompress" phase; the pallas impl fuses upcast +
+    expand + LayerNorm)."""
+    from repro.models import backend as B
+    return B.get_impl("decompress", impl)(params, r,
+                                          compute_dtype=compute_dtype)
+
+
 def roundtrip(params: dict, s_l, *, store_dtype=jnp.float16,
-              compute_dtype=jnp.bfloat16):
-    return decompress(params, compress(params, s_l, store_dtype=store_dtype),
-                      compute_dtype=compute_dtype)
+              compute_dtype=jnp.bfloat16, impl="plain"):
+    return decompress(params, compress(params, s_l, store_dtype=store_dtype,
+                                       impl=impl),
+                      compute_dtype=compute_dtype, impl=impl)
 
 
 # ---------------------------------------------------------------------------

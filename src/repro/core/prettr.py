@@ -26,16 +26,26 @@ Positions: the query segment is padded to ``max_query_len`` so document
 tokens always sit at positions ``max_query_len + i`` — index-time encoding
 must use the same positions the joint forward would (the paper pads queries
 for the same reason).
+
+Compute backends: every hot path here dispatches through the pluggable
+backend layer (``repro.models.backend``) selected by the backbone config —
+``attn_impl`` ("plain" | "blocked" | "pallas") covers the split-mask layers
+and the CLS-only final layer (which runs the flash-*decode* kernel under
+"pallas"), ``compress_impl`` ("plain" | "pallas") covers the d->e->d
+bottleneck.  The equivalence invariant above holds under every backend;
+off-TPU the pallas kernels fall back to interpret mode automatically.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import compression as C
+from repro.models import backend as B
 from repro.models import layers as L
 from repro.models import transformer as T
 
@@ -59,11 +69,15 @@ class PreTTRConfig:
 
 
 def make_backbone(n_layers=12, d_model=768, n_heads=12, d_ff=3072,
-                  vocab_size=30522, l=6, max_len=256, **kw) -> T.TransformerConfig:
-    """A Vanilla-BERT-style encoder (the paper's base model family)."""
+                  vocab_size=30522, l=6, max_len=256, n_kv_heads=None,
+                  **kw) -> T.TransformerConfig:
+    """A Vanilla-BERT-style encoder (the paper's base model family).
+    ``n_kv_heads`` < ``n_heads`` gives a GQA variant (served by every
+    attention backend, incl. the pallas kernels)."""
     return T.TransformerConfig(
         name="prettr_bert", n_layers=n_layers, d_model=d_model,
-        n_heads=n_heads, n_kv_heads=n_heads, d_ff=d_ff, vocab_size=vocab_size,
+        n_heads=n_heads, n_kv_heads=n_kv_heads or n_heads, d_ff=d_ff,
+        vocab_size=vocab_size,
         causal=False, rope=False, learned_pos=max_len, segment_vocab=2,
         norm="layernorm", gated_mlp=False, activation="gelu", mlp_bias=True,
         qkv_bias=True, split_layers=l, **kw)
@@ -97,9 +111,9 @@ def _score_from_cls(params, cfg: PreTTRConfig, cls_rep):
 
 def _cls_only_layer(lp, x, cfg: T.TransformerConfig, *, positions, valid):
     """Final transformer layer computing only the [CLS] (index 0) row of
-    attention — paper §6.3.  x: [B, S, d] -> cls rep [B, d]."""
-    import math
-
+    attention — paper §6.3: a decode-shaped attention, dispatched through
+    the backend registry (the pallas impl is the flash-decode kernel).
+    x: [B, S, d] -> cls rep [B, d]."""
     b, s, _ = x.shape
     dh = cfg.dh
     cd = cfg.compute_dtype
@@ -119,9 +133,10 @@ def _cls_only_layer(lp, x, cfg: T.TransformerConfig, *, positions, valid):
     # bidirectional single-row attention over the full sequence
     k_pos = positions
     q_pos = jnp.full((b, 1), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
-    out = L.decode_attention(q, k, v, scale=1.0 / math.sqrt(dh),
-                             k_pos=k_pos, q_pos=q_pos, window=-1,
-                             k_valid=valid)
+    out = B.get_impl("decode_attention", cfg.attn_impl)(
+        q, k, v, cfg=cfg, scale=1.0 / math.sqrt(dh),
+        k_pos=k_pos, q_pos=q_pos, window=-1, k_valid=valid,
+        static_window=-1)
     out = out.reshape(b, 1, cfg.n_heads * dh) @ p["wo"].astype(cd)
     x_cls = x[:, :1] + out
     h2 = L.apply_norm(lp["ln2"], x_cls, cfg.norm)
@@ -136,7 +151,8 @@ def _maybe_roundtrip_docs(params, cfg: PreTTRConfig, x, segs):
     if not cfg.compress_dim:
         return x
     x_hat = C.roundtrip(params["compressor"], x, store_dtype=cfg.store_dtype,
-                        compute_dtype=cfg.backbone.compute_dtype)
+                        compute_dtype=cfg.backbone.compute_dtype,
+                        impl=cfg.backbone.compress_impl)
     return jnp.where((segs == 1)[..., None], x_hat, x)
 
 
@@ -154,7 +170,8 @@ def rank_forward(params, cfg: PreTTRConfig, tokens, segs, valid):
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     x = T.embed(params["backbone"], bcfg, tokens, positions, segs)
     x, _ = T.run_layer_range(params["backbone"], bcfg, x, 0, cfg.l,
-                             positions=positions, segs=segs, valid=valid)
+                             positions=positions, segs=segs, valid=valid,
+                             seg_boundary=cfg.max_query_len)
     x = _maybe_roundtrip_docs(params, cfg, x, segs)
     last = bcfg.n_layers - (1 if cfg.cls_only_last_layer else 0)
     x, _ = T.run_layer_range(params["backbone"], bcfg, x, cfg.l, last,
@@ -194,7 +211,8 @@ def precompute_docs(params, cfg: PreTTRConfig, doc_tokens, doc_valid):
     x, _ = T.run_layer_range(params["backbone"], bcfg, x, 0, cfg.l,
                              positions=positions, segs=segs, valid=doc_valid)
     if cfg.compress_dim:
-        return C.compress(params["compressor"], x, store_dtype=cfg.store_dtype)
+        return C.compress(params["compressor"], x, store_dtype=cfg.store_dtype,
+                          impl=bcfg.compress_impl)
     return x.astype(cfg.store_dtype)
 
 
@@ -221,7 +239,8 @@ def join_and_score(params, cfg: PreTTRConfig, q_reps, q_valid, doc_store,
     ld = doc_store.shape[1]
     if cfg.compress_dim:
         d_reps = C.decompress(params["compressor"], doc_store,
-                              compute_dtype=bcfg.compute_dtype)
+                              compute_dtype=bcfg.compute_dtype,
+                              impl=bcfg.compress_impl)
     else:
         d_reps = doc_store.astype(bcfg.compute_dtype)
     x = jnp.concatenate([q_reps.astype(bcfg.compute_dtype), d_reps], axis=1)

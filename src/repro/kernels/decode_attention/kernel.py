@@ -23,7 +23,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
                    m_scr, l_scr, acc_scr, *,
                    block_k: int, window: int, scale: float):
     b = pl.program_id(0)
@@ -52,7 +52,7 @@ def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = k_pos < length
+        mask = (k_pos < length) & (valid_ref[...] > 0)
         if window > 0:
             mask &= (q_pos - k_pos) < window
         s = jnp.where(mask, s, NEG_INF)
@@ -72,9 +72,11 @@ def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
             .astype(o_ref.dtype)
 
 
-def flash_decode_pallas(q, k, v, lengths, *, window: int, block_k: int,
-                        interpret: bool):
-    """q: [B, Hkv, R, D]; k, v: [B, Hkv, S, D]; lengths: [B]."""
+def flash_decode_pallas(q, k, v, lengths, k_valid, *, window: int,
+                        block_k: int, interpret: bool):
+    """q: [B, Hkv, R, D]; k, v: [B, Hkv, S, D]; lengths: [B]; k_valid:
+    [B, S] i32 (0 = masked — non-prefix validity for the CLS-only layer;
+    ``lengths`` stays the tile-skip bound covering every valid index)."""
     b, hkv, r, d = q.shape
     s = k.shape[2]
     assert s % block_k == 0
@@ -92,6 +94,7 @@ def flash_decode_pallas(q, k, v, lengths, *, window: int, block_k: int,
                              lambda b, h, ik, L: (b, h, ik, 0)),
                 pl.BlockSpec((1, 1, block_k, d),
                              lambda b, h, ik, L: (b, h, ik, 0)),
+                pl.BlockSpec((1, block_k), lambda b, h, ik, L: (b, ik)),
             ],
             out_specs=pl.BlockSpec((1, 1, r, d),
                                    lambda b, h, ik, L: (b, h, 0, 0)),
@@ -103,4 +106,4 @@ def flash_decode_pallas(q, k, v, lengths, *, window: int, block_k: int,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, r, d), q.dtype),
         interpret=interpret,
-    )(lengths, q, k, v)
+    )(lengths, q, k, v, k_valid)

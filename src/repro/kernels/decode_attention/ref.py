@@ -9,8 +9,9 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def decode_attention_ref(q, k, v, lengths, *, window: int = -1):
-    """q: [B, Hq, 1, D]; k, v: [B, Hkv, S, D]; lengths: [B] -> [B, Hq, 1, D].
+def decode_attention_ref(q, k, v, lengths, k_valid=None, *, window: int = -1):
+    """q: [B, Hq, 1, D]; k, v: [B, Hkv, S, D]; lengths: [B]; k_valid:
+    optional [B, S] boolean (non-prefix validity) -> [B, Hq, 1, D].
     The query sits at position lengths-1 (last written cache slot)."""
     b, hq, _, d = q.shape
     hkv, s = k.shape[1], k.shape[2]
@@ -22,6 +23,8 @@ def decode_attention_ref(q, k, v, lengths, *, window: int = -1):
     k_pos = jnp.arange(s)
     q_pos = (lengths - 1)[:, None, None, None]
     mask = k_pos[None, None, None, :] < lengths[:, None, None, None]
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, :]
     if window > 0:
         mask &= (q_pos - k_pos[None, None, None, :]) < window
     logits = jnp.where(mask, logits, NEG_INF)

@@ -1,0 +1,13 @@
+"""Shared mask plumbing for the kernel wrappers and the backend layer."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def last_valid_lengths(valid, size: int):
+    """Boolean ``valid [B, S]`` -> ``[B]`` int32: one past the last True
+    per row (0 for all-False rows).  This is the kernels' tile-skip bound:
+    it must cover every valid index (``valid[b, i] => i < lengths[b]``)
+    without requiring the mask to be a prefix."""
+    rev = jnp.argmax(valid[:, ::-1].astype(jnp.int32), axis=-1)
+    return jnp.where(valid.any(axis=-1), size - rev, 0).astype(jnp.int32)

@@ -27,7 +27,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _attn_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+def _attn_kernel(lengths_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
                  m_scr, l_scr, acc_scr, *,
                  block_q: int, block_k: int, causal: bool, window: int,
                  seg_boundary: int, scale: float):
@@ -71,7 +71,7 @@ def _attn_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
 
         q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
         k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-        mask = k_pos < lengths_ref[b]
+        mask = (k_pos < lengths_ref[b]) & (valid_ref[...] > 0)
         if causal:
             mask &= k_pos <= q_pos
         if window > 0:
@@ -95,10 +95,13 @@ def _attn_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
-def flash_attention_pallas(q, k, v, lengths, *, causal: bool, window: int,
-                           seg_boundary: int, block_q: int, block_k: int,
-                           interpret: bool):
-    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B] i32.
+def flash_attention_pallas(q, k, v, lengths, k_valid, *, causal: bool,
+                           window: int, seg_boundary: int, block_q: int,
+                           block_k: int, interpret: bool):
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B] i32;
+    k_valid: [B, Skv] i32 (0 = masked — supports non-prefix validity, e.g.
+    PreTTR's padded-query + padded-doc two-prefix pattern; ``lengths`` stays
+    the tile-skip bound and must cover every valid index).
     Sq/Skv must be multiples of block_q/block_k (ops.py pads)."""
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
@@ -123,6 +126,8 @@ def flash_attention_pallas(q, k, v, lengths, *, causal: bool, window: int,
                              lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
                 pl.BlockSpec((1, 1, block_k, d),
                              lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
+                pl.BlockSpec((1, block_k),
+                             lambda b, h, iq, ik, L: (b, ik)),
             ],
             out_specs=pl.BlockSpec((1, 1, block_q, d),
                                    lambda b, h, iq, ik, L: (b, h, iq, 0)),
@@ -134,4 +139,4 @@ def flash_attention_pallas(q, k, v, lengths, *, causal: bool, window: int,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
         interpret=interpret,
-    )(lengths, q, k, v)
+    )(lengths, q, k, v, k_valid)

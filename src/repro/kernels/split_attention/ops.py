@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.masking import last_valid_lengths
 from repro.kernels.split_attention.kernel import flash_attention_pallas
 
 
@@ -15,22 +16,29 @@ def _on_tpu() -> bool:
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "seg_boundary", "block_q", "block_k", "interpret"))
-def split_flash_attention(q, k, v, lengths=None, *, causal: bool = False,
+def split_flash_attention(q, k, v, lengths=None, k_valid=None, *,
+                          causal: bool = False,
                           window: int = -1, seg_boundary: int = -1,
                           block_q: int = 128, block_k: int = 128,
                           interpret: bool | None = None):
     """Flash attention with PreTTR split / causal / sliding-window masks.
 
     q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B] valid KV length
-    (defaults to Skv).  Pads sequence dims to block multiples; the pad tail
-    is masked via ``lengths`` and sliced off the output.
+    (defaults to Skv); k_valid: optional [B, Skv] boolean mask for
+    non-prefix validity (the model's padded-segment layouts) — when given,
+    ``lengths`` defaults to one past the last valid index per row.  Pads
+    sequence dims to block multiples; the pad tail is masked and sliced off
+    the output.
     """
     if interpret is None:
         interpret = not _on_tpu()
     b, hq, sq, d = q.shape
     skv = k.shape[2]
     if lengths is None:
-        lengths = jnp.full((b,), skv, jnp.int32)
+        lengths = (jnp.full((b,), skv, jnp.int32) if k_valid is None
+                   else last_valid_lengths(k_valid, skv))
+    if k_valid is None:
+        k_valid = jnp.ones((b, skv), jnp.int32)
     bq = min(block_q, max(8, sq))
     bk = min(block_k, max(8, skv))
     pad_q = (-sq) % bq
@@ -40,7 +48,9 @@ def split_flash_attention(q, k, v, lengths=None, *, causal: bool = False,
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        k_valid = jnp.pad(k_valid.astype(jnp.int32), ((0, 0), (0, pad_k)))
     out = flash_attention_pallas(q, k, v, lengths.astype(jnp.int32),
+                                 k_valid.astype(jnp.int32),
                                  causal=causal, window=window,
                                  seg_boundary=seg_boundary,
                                  block_q=bq, block_k=bk, interpret=interpret)

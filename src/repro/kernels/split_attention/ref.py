@@ -9,9 +9,11 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def split_attention_ref(q, k, v, lengths, *, causal: bool = False,
+def split_attention_ref(q, k, v, lengths, k_valid=None, *,
+                        causal: bool = False,
                         window: int = -1, seg_boundary: int = -1):
-    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B].
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B]; k_valid:
+    optional [B, Skv] boolean (non-prefix validity).
     Returns [B, Hq, Sq, D]."""
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
@@ -23,6 +25,8 @@ def split_attention_ref(q, k, v, lengths, *, causal: bool = False,
     q_pos = jnp.arange(sq)[:, None]
     k_pos = jnp.arange(skv)[None, :]
     mask = jnp.broadcast_to(k_pos < lengths[:, None, None, None], s.shape)
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, :]
     if causal:
         mask &= k_pos <= q_pos
     if window > 0:

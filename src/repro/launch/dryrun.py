@@ -87,19 +87,26 @@ def parse_collective_bytes(hlo_text: str) -> dict:
     return out
 
 
-def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             backend: str | None = None) -> dict:
     import jax
 
+    from repro.configs import get_arch
     from repro.dist.sharding import default_rules
     from repro.launch.mesh import make_production_mesh
-    from repro.launch.steps import build_cell
+    from repro.launch.steps import backend_support, build_cell
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     rules = default_rules(mesh)
     n_dev = mesh.devices.size
 
+    # label honestly: recsys/GNN configs have no backend knob, so a
+    # requested backend that passed through must not be recorded as applied
+    applied = (backend if backend_support(get_arch(arch).config, backend)
+               == "applied" else "default")
+
     t0 = time.time()
-    cell = build_cell(arch, shape, rules)
+    cell = build_cell(arch, shape, rules, backend=backend)
     with mesh:
         lowered = jax.jit(cell.fn, donate_argnums=cell.donate) \
             .lower(*cell.args)
@@ -151,6 +158,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
 
     return {
         "arch": arch, "shape": shape, "mesh": mesh_kind, "devices": n_dev,
+        "backend": applied,
         "kind": cell.kind, "ok": True, "notes": cell.notes,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory_analysis": mem_info,
@@ -180,6 +188,12 @@ def main() -> None:
                     default="both")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    choices=["plain", "blocked", "pallas"],
+                    help="compute-backend override for every arch config "
+                         "(attn_impl + compress_impl); recorded per cell so "
+                         "benchmarks/roofline.py reports a backend column — "
+                         "use a distinct --out per backend")
     args = ap.parse_args()
 
     from repro.launch.steps import cell_names
@@ -198,9 +212,20 @@ def main() -> None:
             if os.path.exists(path) and not args.force:
                 print(f"[skip] {arch} {shape} {mesh_kind} (exists)")
                 continue
+            if args.backend is not None:
+                from repro.configs import get_arch
+                from repro.launch.steps import backend_support
+                if backend_support(get_arch(arch).config,
+                                   args.backend) == "unsupported":
+                    # known static-mask limitation (mixed window sizes),
+                    # not a sharding bug — don't record a FAIL cell
+                    print(f"[skip] {arch} {shape} {mesh_kind} "
+                          f"({args.backend} backend unsupported: "
+                          f"mixed layer windows)")
+                    continue
             print(f"[dryrun] {arch} {shape} {mesh_kind} ...", flush=True)
             try:
-                rec = run_cell(arch, shape, mesh_kind)
+                rec = run_cell(arch, shape, mesh_kind, backend=args.backend)
                 n_ok += 1
                 print(f"  ok: peak/dev={rec['peak_bytes_per_device']/2**30:.2f}GiB "
                       f"dominant={rec['dominant_term']} "

@@ -32,9 +32,16 @@ def main() -> None:
     ap.add_argument("--micro-batch", type=int, default=32)
     ap.add_argument("--index-dir", default="results/prettr_index")
     ap.add_argument("--index-batch", type=int, default=64)
+    ap.add_argument("--backend", default="blocked",
+                    choices=["plain", "blocked", "pallas"],
+                    help="compute backend for indexing and serving "
+                         "(pallas = flash/fused kernels; interpret off-TPU)")
     args = ap.parse_args()
 
-    cfg = smoke_config(l=args.l, compress_dim=args.compress_dim)
+    from repro.models.backend import impls_for
+    attn_impl, compress_impl = impls_for(args.backend)
+    cfg = smoke_config(l=args.l, compress_dim=args.compress_dim,
+                       attn_impl=attn_impl, compress_impl=compress_impl)
     world = SyntheticIRWorld(n_docs=args.n_docs, n_queries=args.n_queries,
                              vocab_size=cfg.backbone.vocab_size,
                              doc_len=cfg.max_doc_len - 2, seed=0)

@@ -569,8 +569,48 @@ def make_prettr_cell(spec: ArchSpec, shape_name: str,
 # ---------------------------------------------------------------------------
 
 
-def build_cell(arch: str, shape_name: str, rules: ShardingRules) -> Cell:
-    spec = get_arch(arch)
+def backend_support(cfg, backend: str | None) -> str:
+    """'applied' if ``backend`` lands on ``cfg``, 'passthrough' if the
+    config has no backend knob (recsys/GNN), 'unsupported' if the arch
+    cannot run it: pallas specializes masks statically, so a layer range
+    mixing window sizes — or split flags, for a bare TransformerConfig
+    whose cells run the full layer range — raises at trace time.
+    (A PreTTRConfig with an interior split boundary is fine: its cells
+    execute [0, l) / [l, n) subranges, each uniform.)"""
+    if backend is None:
+        return "passthrough"
+    from repro.models.backend import transformer_config_of
+    tcfg = transformer_config_of(cfg)
+    if tcfg is None:
+        return "passthrough"
+    if backend == "pallas":
+        if len(set(tcfg.layer_windows())) > 1:
+            return "unsupported"
+        if tcfg is cfg and 0 < tcfg.split_layers < tcfg.n_layers:
+            return "unsupported"
+    return "applied"
+
+
+def _with_backend(spec: ArchSpec, backend: str | None) -> ArchSpec:
+    """Return a spec whose configs route through ``backend``
+    (attn_impl + compress_impl); configs where the backend does not apply
+    (see :func:`backend_support`) pass through unchanged."""
+    if backend is None:
+        return spec
+    from repro.models.backend import apply_backend
+
+    def swap(cfg):
+        if cfg is None or backend_support(cfg, backend) != "applied":
+            return cfg
+        return apply_backend(cfg, backend)
+
+    return dataclasses.replace(spec, config=swap(spec.config),
+                               smoke=swap(spec.smoke))
+
+
+def build_cell(arch: str, shape_name: str, rules: ShardingRules,
+               backend: str | None = None) -> Cell:
+    spec = _with_backend(get_arch(arch), backend)
     if arch == "prettr-bert":
         return make_prettr_cell(spec, shape_name, rules)
     if spec.family == "lm":

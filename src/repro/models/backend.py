@@ -1,0 +1,262 @@
+"""Pluggable compute backends for the hot paths (attention / decode /
+compress / decompress).
+
+The Pallas kernel subsystems (``kernels/split_attention``,
+``kernels/decode_attention``, ``kernels/fused_compress``) implement the
+paper's fast paths; this module is the seam that lets the model, the PreTTR
+core and the serving layer pick between the pure-XLA reference
+implementations and the kernels without code changes — one string knob per
+``TransformerConfig`` (``attn_impl`` for both attention flavours,
+``compress_impl`` for the bottleneck).
+
+Registry
+--------
+Implementations are registered per *kind* under a name::
+
+    get_impl("attention", "pallas")(q, k, v, cfg=cfg, ...)
+
+Kinds and their call contracts (all arrays in **model layout**):
+
+* ``attention(q, k, v, *, cfg, scale, positions, window, split_flag, segs,
+  valid, seg_boundary, static_window, static_split)`` —
+  q ``[B, Sq, Hq, D]``; k, v ``[B, Skv, Hkv, D]`` (GQA: ``Hkv <= Hq``).
+  Returns ``[B, Sq, Hq, D]``.
+* ``decode_attention(q, k, v, *, cfg, scale, q_pos, k_pos, window, k_valid,
+  lengths, static_window)`` — q ``[B, 1, Hq, D]``; k, v ``[B, S, Hkv, D]``.
+  One query row against a full K/V sequence: the transformer decode step
+  and the PreTTR CLS-only final layer (paper §6.3).
+* ``compress(params, x, *, store_dtype)`` / ``decompress(params, r, *,
+  compute_dtype)`` — the paper's d->e->d bottleneck (§4.2).
+
+Layout adapters
+---------------
+The Pallas kernels use ``[B, H, S, D]`` and per-row valid *lengths*; the
+model uses ``[B, S, H, D]`` and boolean ``valid`` masks.  The ``pallas``
+impls transpose at the boundary and forward the full boolean mask; the
+kernel ops wrappers derive ``lengths`` (last valid index plus one,
+``repro.kernels.masking``) for tile skipping, so non-prefix validity
+(PreTTR's padded-query + padded-doc two-prefix pattern) is masked exactly.
+
+Static-mask contract (``pallas`` only)
+--------------------------------------
+The kernels specialize their masks at trace time, so the ``pallas`` impls
+need *static* values: ``static_window``/``static_split`` (the dispatcher in
+``transformer._run_layers`` resolves these from the config and raises if a
+layer range mixes different windows or split flags) and ``seg_boundary``
+(the static token index where segment 0 ends — ``max_query_len`` for the
+joint PreTTR forward, ``-1`` for single-segment ranges).  Mask positions
+are token indices, which matches every caller in this repo (sequences are
+``arange``-positioned wherever causal/window/split masks are active).
+
+Off-TPU the kernel wrappers automatically fall back to Pallas interpret
+mode (``interpret=None`` -> interpret unless ``jax.default_backend() ==
+"tpu"``), so every backend runs — and is tested — on CPU.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import flash_decode_attention
+from repro.kernels.fused_compress import fused_compress, fused_decompress
+from repro.kernels.split_attention import split_flash_attention
+from repro.models import layers as L
+
+KINDS = ("attention", "decode_attention", "compress", "decompress")
+
+_REGISTRY: dict[str, dict[str, Callable]] = {k: {} for k in KINDS}
+
+
+def register(kind: str, name: str):
+    """Decorator: register ``fn`` as the ``name`` implementation of
+    ``kind``.  Re-registering a name overwrites (tests / downstream
+    extensions)."""
+    if kind not in _REGISTRY:
+        raise ValueError(f"unknown backend kind {kind!r}; kinds: {KINDS}")
+
+    def deco(fn):
+        _REGISTRY[kind][name] = fn
+        return fn
+    return deco
+
+
+def available(kind: str) -> list[str]:
+    if kind not in _REGISTRY:
+        raise ValueError(f"unknown backend kind {kind!r}; kinds: {KINDS}")
+    return sorted(_REGISTRY[kind])
+
+
+def get_impl(kind: str, name: str) -> Callable:
+    impls = _REGISTRY.get(kind)
+    if impls is None:
+        raise ValueError(f"unknown backend kind {kind!r}; kinds: {KINDS}")
+    fn = impls.get(name)
+    if fn is None:
+        raise ValueError(
+            f"unknown {kind} implementation {name!r}; "
+            f"available: {available(kind)}")
+    return fn
+
+
+def impls_for(backend: str) -> tuple[str, str]:
+    """Map a backend family name to ``(attn_impl, compress_impl)`` — the
+    single place that knows the compressor has no "blocked" flavour, so
+    only "pallas" routes it off "plain"."""
+    return backend, ("pallas" if backend == "pallas" else "plain")
+
+
+def transformer_config_of(cfg):
+    """The TransformerConfig carrying the backend knobs: ``cfg`` itself, its
+    ``backbone`` *field* (PreTTRConfig — a backbone() method, as on
+    Bert4RecConfig, is not this case), or None if neither has them."""
+    import dataclasses
+
+    bb = getattr(cfg, "backbone", None)
+    if dataclasses.is_dataclass(bb) and hasattr(bb, "attn_impl"):
+        return bb
+    return cfg if hasattr(cfg, "attn_impl") else None
+
+
+def apply_backend(cfg, backend: str):
+    """Copy of ``cfg`` — a TransformerConfig, or any dataclass carrying one
+    as a ``backbone`` field (PreTTRConfig) — rerouted through the
+    ``backend`` family (attn_impl + compress_impl)."""
+    import dataclasses
+
+    attn_impl, compress_impl = impls_for(backend)
+    tcfg = transformer_config_of(cfg)
+    if tcfg is not None and tcfg is not cfg:
+        return dataclasses.replace(cfg, backbone=dataclasses.replace(
+            tcfg, attn_impl=attn_impl, compress_impl=compress_impl))
+    return dataclasses.replace(cfg, attn_impl=attn_impl,
+                               compress_impl=compress_impl)
+
+
+def validate_config(attn_impl: str, compress_impl: str) -> None:
+    """Raise ValueError for unknown impl names (config-construction time,
+    so a typo cannot silently fall through to a default branch).  Each knob
+    dispatches two kinds (attention+decode, compress+decompress), so both
+    registries must know the name — a half-registered extension would
+    otherwise fail deep inside a jit trace."""
+    for kind, name in (("attention", attn_impl),
+                       ("decode_attention", attn_impl)):
+        if name not in _REGISTRY[kind]:
+            raise ValueError(
+                f"unknown attn_impl {name!r} (no {kind} registration); "
+                f"available: {available(kind)}")
+    for kind, name in (("compress", compress_impl),
+                       ("decompress", compress_impl)):
+        if name not in _REGISTRY[kind]:
+            raise ValueError(
+                f"unknown compress_impl {name!r} (no {kind} registration); "
+                f"available: {available(kind)}")
+
+
+# ---------------------------------------------------------------------------
+# attention: full-sequence self-attention (train / prefill / PreTTR layers)
+# ---------------------------------------------------------------------------
+
+
+@register("attention", "plain")
+def _attention_plain(q, k, v, *, cfg, scale, positions, window, split_flag,
+                     segs, valid, seg_boundary=-1, static_window=None,
+                     static_split=None):
+    del seg_boundary, static_window, static_split
+    mask = L.attention_mask(positions, positions, causal=cfg.causal,
+                            window=window, q_seg=segs, k_seg=segs,
+                            split_segments=split_flag,
+                            q_valid=valid, k_valid=valid)
+    return L.plain_attention(q, k, v, mask[:, None], scale=scale)
+
+
+@register("attention", "blocked")
+def _attention_blocked(q, k, v, *, cfg, scale, positions, window, split_flag,
+                       segs, valid, seg_boundary=-1, static_window=None,
+                       static_split=None):
+    del seg_boundary, static_window, static_split
+    return L.blocked_attention(
+        q, k, v, scale=scale, block_kv=cfg.block_kv,
+        q_pos=positions, k_pos=positions, causal=cfg.causal, window=window,
+        q_seg=segs, k_seg=segs, split_segments=split_flag, k_valid=valid)
+
+
+@register("attention", "pallas")
+def _attention_pallas(q, k, v, *, cfg, scale, positions, window, split_flag,
+                      segs, valid, seg_boundary=-1, static_window=None,
+                      static_split=None):
+    del scale, positions, window, split_flag, segs  # static contract below
+    if static_window is None or static_split is None:
+        raise ValueError(
+            "attn_impl='pallas' needs static per-range window/split "
+            "metadata; this layer range mixes values — use 'blocked' or "
+            "run the heterogeneous layers via separate layer_slice ranges")
+    boundary = seg_boundary if static_split else -1
+    qt = q.transpose(0, 2, 1, 3)                   # [B, S, H, D] -> [B, H, S, D]
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    # the ops wrapper derives per-row lengths (last valid + 1) from k_valid
+    out = split_flash_attention(
+        qt, kt, vt, None, k_valid=valid, causal=cfg.causal,
+        window=int(static_window), seg_boundary=int(boundary))
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: one query row vs a K/V sequence (decode, CLS-only layer)
+# ---------------------------------------------------------------------------
+
+
+@register("decode_attention", "plain")
+@register("decode_attention", "blocked")   # no blocked flavour: jnp reference
+def _decode_plain(q, k, v, *, cfg, scale, q_pos, k_pos, window, k_valid=None,
+                  lengths=None, static_window=None):
+    del cfg, lengths, static_window
+    return L.decode_attention(q, k, v, scale=scale, k_pos=k_pos, q_pos=q_pos,
+                              window=window, k_valid=k_valid)
+
+
+@register("decode_attention", "pallas")
+def _decode_pallas(q, k, v, *, cfg, scale, q_pos, k_pos, window, k_valid=None,
+                   lengths=None, static_window=None):
+    del cfg, scale, q_pos, k_pos, window
+    if static_window is None:
+        raise ValueError(
+            "attn_impl='pallas' decode needs a static window; this layer "
+            "range mixes window sizes — use 'blocked'")
+    qt = q.transpose(0, 2, 1, 3)                   # [B, 1, H, D] -> [B, H, 1, D]
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_decode_attention(qt, kt, vt, lengths, k_valid=k_valid,
+                                 window=int(static_window))
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# compress / decompress: the PreTTR d->e->d bottleneck (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+@register("compress", "plain")
+def _compress_plain(params, x, *, store_dtype=jnp.float16):
+    from repro.core.compression import compress_jnp
+    return compress_jnp(params, x, store_dtype=store_dtype)
+
+
+@register("compress", "pallas")
+def _compress_pallas(params, x, *, store_dtype=jnp.float16):
+    return fused_compress(x, params["w_comp"], params["b_comp"],
+                          out_dtype=store_dtype)
+
+
+@register("decompress", "plain")
+def _decompress_plain(params, r, *, compute_dtype=jnp.bfloat16):
+    from repro.core.compression import decompress_jnp
+    return decompress_jnp(params, r, compute_dtype=compute_dtype)
+
+
+@register("decompress", "pallas")
+def _decompress_pallas(params, r, *, compute_dtype=jnp.bfloat16):
+    return fused_decompress(r, params["w_decomp"], params["b_decomp"],
+                            params["ln"]["scale"], params["ln"]["bias"],
+                            out_dtype=compute_dtype)

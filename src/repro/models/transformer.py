@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.dist.context import maybe_shard
+from repro.models import backend as B
 from repro.models import layers as L
 from repro.models import moe as moe_lib
 
@@ -77,7 +78,9 @@ class TransformerConfig:
     # --- execution ---
     compute_dtype: Any = jnp.bfloat16
     param_dtype: Any = jnp.float32
-    attn_impl: str = "blocked"                # "blocked" | "plain"
+    # compute backends (repro.models.backend registry):
+    attn_impl: str = "blocked"                # "blocked" | "plain" | "pallas"
+    compress_impl: str = "plain"              # "plain" | "pallas"
     block_kv: int = 512
     remat: str = "block"                      # "none" | "block"
     remat_block: int = 1                      # layers per scan group
@@ -88,6 +91,11 @@ class TransformerConfig:
     logits_chunk: int = 0                     # chunk seq for the LM head
     # --- PreTTR hook: first `split_layers` layers mask query<->doc attention
     split_layers: int = 0
+
+    def __post_init__(self):
+        # unknown impl names must fail here, not fall through to a default
+        # dispatch branch at trace time
+        B.validate_config(self.attn_impl, self.compress_impl)
 
     @property
     def dh(self) -> int:
@@ -209,9 +217,12 @@ def init_params(key, cfg: TransformerConfig):
 
 
 def _attention(p, x, cfg: TransformerConfig, *, positions, window, rope_base,
-               split_flag, segs, valid, cache=None, cache_pos=None):
-    """One attention block. If ``cache=(k,v)`` is given, runs a decode step
-    (x is [B, 1, d]) and returns the updated cache."""
+               split_flag, segs, valid, seg_boundary=-1, static_window=None,
+               static_split=None, cache=None, cache_pos=None):
+    """One attention block, dispatched through the compute-backend registry
+    (``repro.models.backend``) selected by ``cfg.attn_impl``.  If
+    ``cache=(k,v)`` is given, runs a decode step (x is [B, 1, d]) and
+    returns the updated cache."""
     b, s, _ = x.shape
     dh = cfg.dh
     cd = cfg.compute_dtype
@@ -238,32 +249,33 @@ def _attention(p, x, cfg: TransformerConfig, *, positions, window, rope_base,
         cv = lax.dynamic_update_slice(cv, v, (0, cache_pos, 0, 0))
         new_cache = (ck, cv)
         k_pos = jnp.broadcast_to(jnp.arange(ck.shape[1]), (b, ck.shape[1]))
-        out = L.decode_attention(q, ck, cv, scale=scale, k_pos=k_pos,
-                                 q_pos=positions, window=window)
-    elif cfg.attn_impl == "blocked":
-        out = L.blocked_attention(
-            q, k, v, scale=scale, block_kv=cfg.block_kv,
-            q_pos=positions, k_pos=positions, causal=cfg.causal, window=window,
-            q_seg=segs, k_seg=segs, split_segments=split_flag, k_valid=valid)
+        out = B.get_impl("decode_attention", cfg.attn_impl)(
+            q, ck, cv, cfg=cfg, scale=scale, q_pos=positions, k_pos=k_pos,
+            window=window, lengths=positions[:, 0] + 1,
+            static_window=static_window)
     else:
-        mask = L.attention_mask(positions, positions, causal=cfg.causal,
-                                window=window, q_seg=segs, k_seg=segs,
-                                split_segments=split_flag,
-                                q_valid=valid, k_valid=valid)
-        out = L.plain_attention(q, k, v, mask[:, None], scale=scale)
+        out = B.get_impl("attention", cfg.attn_impl)(
+            q, k, v, cfg=cfg, scale=scale, positions=positions,
+            window=window, split_flag=split_flag, segs=segs, valid=valid,
+            seg_boundary=seg_boundary, static_window=static_window,
+            static_split=static_split)
     out = out.reshape(b, s, cfg.n_heads * dh)
     proj = out @ p["wo"].astype(cd)
     return (proj, (k, v)) if cache is None else (proj, new_cache)
 
 
 def _layer_step(lp, x, cfg: TransformerConfig, *, positions, window, rope_base,
-                split_flag, segs, valid, cache=None, cache_pos=None):
+                split_flag, segs, valid, seg_boundary=-1, static_window=None,
+                static_split=None, cache=None, cache_pos=None):
     """Full transformer block. Returns (x, kv, aux_loss)."""
     cd = cfg.compute_dtype
     h = L.apply_norm(lp["ln1"], x, cfg.norm)
     attn_out, kv = _attention(lp["attn"], h, cfg, positions=positions,
                               window=window, rope_base=rope_base,
                               split_flag=split_flag, segs=segs, valid=valid,
+                              seg_boundary=seg_boundary,
+                              static_window=static_window,
+                              static_split=static_split,
                               cache=cache, cache_pos=cache_pos)
     if cfg.use_post_norm:
         attn_out = L.apply_norm(lp["ln1_post"], attn_out, cfg.norm)
@@ -300,27 +312,49 @@ def _split_groups(tree, n_groups: int, g: int):
 
 def _run_layers(params, cfg: TransformerConfig, x, *, positions, segs, valid,
                 collect_cache=False, cache=None, cache_pos=None,
-                layer_slice: tuple[int, int] | None = None):
+                layer_slice: tuple[int, int] | None = None,
+                seg_boundary: int = -1):
     """Scan over layer groups. Returns (x, stacked_kv_or_new_cache, aux).
 
     ``layer_slice=(lo, hi)`` runs only layers [lo, hi) — the PreTTR
-    precompute (layers [0, l)) / join (layers [l, n)) split."""
+    precompute (layers [0, l)) / join (layers [l, n)) split.
+    ``seg_boundary`` is the static token index where segment 0 ends (the
+    pallas backend's split-mask boundary; -1 = single segment)."""
     lo, hi = layer_slice or (0, cfg.n_layers)
     layer_params = jax.tree.map(lambda a: a[lo:hi], params["layers"])
     n_l = hi - lo
+    if n_l == 0:      # empty range (e.g. PreTTR l=0 precompute): no scan —
+        return x, None, jnp.zeros((), jnp.float32)   # nothing to trace
     g = max(1, min(cfg.remat_block, n_l))
     n_groups = n_l // g
 
-    windows = jnp.asarray(cfg.layer_windows()[lo:hi], jnp.int32)
+    static_windows = cfg.layer_windows()[lo:hi]
+    static_splits = [i < cfg.split_layers for i in range(cfg.n_layers)][lo:hi]
+    # per-layer metadata rides through the scan as traced scalars; when a
+    # range is uniform the *static* value is also known here and handed to
+    # backends (pallas) that specialize their masks at trace time
+    static_window = static_windows[0] if len(set(static_windows)) == 1 else None
+    static_split = static_splits[0] if len(set(static_splits)) == 1 else None
+    if cfg.attn_impl == "pallas" and (static_window is None
+                                      or static_split is None):
+        raise ValueError(
+            f"attn_impl='pallas' requires a uniform window/split-flag per "
+            f"layer range; layers [{lo}, {hi}) mix windows={static_windows} "
+            f"splits={static_splits} — run heterogeneous layers via "
+            f"separate layer_slice ranges or use attn_impl='blocked'")
+
+    windows = jnp.asarray(static_windows, jnp.int32)
     bases = jnp.asarray(cfg.layer_rope_bases()[lo:hi], jnp.float32)
-    splits = jnp.asarray([i < cfg.split_layers for i in range(cfg.n_layers)][lo:hi],
-                         bool)
+    splits = jnp.asarray(static_splits, bool)
     meta = (windows, bases, splits)
 
     def one_layer(lp, x, w, rb, sf, lcache):
         x, kv, a = _layer_step(lp, x, cfg, positions=positions, window=w,
                                rope_base=rb, split_flag=sf, segs=segs,
-                               valid=valid, cache=lcache, cache_pos=cache_pos)
+                               valid=valid, seg_boundary=seg_boundary,
+                               static_window=static_window,
+                               static_split=static_split,
+                               cache=lcache, cache_pos=cache_pos)
         # residual-stream sharding: batch over DP/FSDP plus either d_model
         # (TP) or sequence (Megatron-SP) over the model axis — keeps saved
         # layer inputs (remat checkpoints) 16x smaller either way
@@ -398,24 +432,28 @@ def embed(params, cfg: TransformerConfig, tokens, positions, segs):
 
 
 def forward(params, cfg: TransformerConfig, tokens, *, positions=None,
-            segs=None, valid=None, collect_cache=False):
+            segs=None, valid=None, collect_cache=False, seg_boundary=-1):
     """Full-sequence forward. Returns (hidden [B,S,d], kv_cache|None, aux)."""
     b, s = tokens.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     x = embed(params, cfg, tokens, positions, segs)
     x, kv, aux = _run_layers(params, cfg, x, positions=positions, segs=segs,
-                             valid=valid, collect_cache=collect_cache)
+                             valid=valid, collect_cache=collect_cache,
+                             seg_boundary=seg_boundary)
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
     return x, kv, aux
 
 
 def run_layer_range(params, cfg: TransformerConfig, x, lo: int, hi: int, *,
-                    positions, segs=None, valid=None):
+                    positions, segs=None, valid=None, seg_boundary=-1):
     """Run layers [lo, hi) over already-embedded inputs ``x`` — the public
-    hook PreTTR uses for precompute (0..l) and join (l..n)."""
+    hook PreTTR uses for precompute (0..l) and join (l..n).
+    ``seg_boundary``: static segment-0 end index for the pallas split mask
+    (-1 = single segment / split inactive)."""
     x, _, aux = _run_layers(params, cfg, x, positions=positions, segs=segs,
-                            valid=valid, layer_slice=(lo, hi))
+                            valid=valid, layer_slice=(lo, hi),
+                            seg_boundary=seg_boundary)
     return x, aux
 
 

@@ -1,0 +1,79 @@
+"""Compute-backend layer: registry behaviour, config-time validation,
+impl parity for the compressor, and the static-metadata guard rails."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import compress, decompress, init_compressor
+from repro.models import backend as B
+from repro.models.transformer import TransformerConfig, forward, init_params
+
+
+def test_registry_lists_impls():
+    assert {"plain", "blocked", "pallas"} <= set(B.available("attention"))
+    assert {"plain", "blocked", "pallas"} <= set(B.available("decode_attention"))
+    assert {"plain", "pallas"} <= set(B.available("compress"))
+    assert {"plain", "pallas"} <= set(B.available("decompress"))
+
+
+def test_unknown_impl_and_kind_raise():
+    with pytest.raises(ValueError, match="attention"):
+        B.get_impl("attention", "nope")
+    with pytest.raises(ValueError, match="kind"):
+        B.get_impl("not-a-kind", "plain")
+    with pytest.raises(ValueError, match="kind"):
+        B.available("not-a-kind")
+
+
+def test_config_validates_impl_names():
+    """Unknown impl strings must fail at config construction, not fall
+    through to a default dispatch branch at trace time."""
+    with pytest.raises(ValueError, match="attn_impl"):
+        TransformerConfig(attn_impl="fastest")
+    with pytest.raises(ValueError, match="compress_impl"):
+        TransformerConfig(compress_impl="zip")
+    TransformerConfig(attn_impl="pallas", compress_impl="pallas")  # ok
+
+
+def test_last_valid_lengths():
+    from repro.kernels.masking import last_valid_lengths
+    valid = jnp.asarray([[1, 1, 0, 1, 0],
+                         [0, 0, 0, 0, 0],
+                         [1, 0, 0, 0, 0],
+                         [1, 1, 1, 1, 1]], bool)
+    np.testing.assert_array_equal(np.asarray(last_valid_lengths(valid, 5)),
+                                  [4, 0, 1, 5])
+
+
+def test_pallas_requires_uniform_layer_metadata():
+    """A layer range mixing window sizes cannot be served by the static
+    pallas masks — must fail loudly, not silently mis-mask."""
+    cfg = TransformerConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=64, vocab_size=64, attn_impl="pallas",
+                            window_pattern=(4, -1), window_size=4,
+                            compute_dtype=jnp.float32)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, 64)
+    with pytest.raises(ValueError, match="uniform"):
+        forward(params, cfg, toks)
+
+
+@pytest.mark.parametrize("t", [32, 33])   # 33: exercises the tile padding
+def test_compress_impl_parity(t):
+    d, e = 64, 16
+    comp, _ = init_compressor(jax.random.PRNGKey(0), d, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (t, d))
+    r_plain = compress(comp, x, impl="plain")
+    r_pallas = compress(comp, x, impl="pallas")
+    assert r_plain.dtype == r_pallas.dtype == jnp.float16
+    np.testing.assert_allclose(np.asarray(r_plain, np.float32),
+                               np.asarray(r_pallas, np.float32),
+                               rtol=2e-3, atol=2e-3)
+    y_plain = decompress(comp, r_plain, compute_dtype=jnp.float32,
+                         impl="plain")
+    y_pallas = decompress(comp, r_plain, compute_dtype=jnp.float32,
+                          impl="pallas")
+    np.testing.assert_allclose(np.asarray(y_plain), np.asarray(y_pallas),
+                               rtol=1e-4, atol=1e-4)

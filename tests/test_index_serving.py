@@ -90,6 +90,38 @@ def test_reranker_straggler_redispatch(tmp_path):
     assert len(ranked) == 8
 
 
+def test_straggler_stats_not_double_counted(tmp_path):
+    """Regression: a discarded overshooting batch used to leave its
+    combine_s (and re-loaded load_s) in RerankStats, inflating the Table-5
+    split.  With a 0s deadline an 8-doc batch runs 7 join attempts
+    (1 + 2 + 4) but only the four depth-2 leaves are returned — only their
+    time may be counted."""
+    import time
+
+    cfg, params, docs, valid, lengths = _setup(tmp_path)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    rr = Reranker(params, cfg, idx, micro_batch=8, deadline_s=0.0)
+    q = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (8,), 5, 128))
+    qv = np.ones((8,), bool)
+    rr.rerank(q, qv, list(range(8)))          # warm every jit shape (8,4,2)
+
+    inner = rr._join
+    n_calls = [0]
+    sleep = 0.1    # dominates the (jit-cached) join cost even on loaded CI
+
+    def slow_join(*a):                         # deterministic per-call cost
+        n_calls[0] += 1
+        time.sleep(sleep)
+        return inner(*a)
+
+    rr._join = slow_join
+    _, _, stats = rr.rerank(q, qv, list(range(8)))
+    assert stats.n_redispatch == 3            # depth 0 + two depth-1 halves
+    assert n_calls[0] == 7
+    # 4 returned leaves counted; the 3 discarded attempts (0.15s) are not
+    assert 4 * sleep <= stats.combine_s < 6 * sleep
+
+
 def test_rerank_empty_doc_ids(tmp_path):
     """Regression: rerank([]) used to hit np.concatenate on an empty list."""
     cfg, params, docs, valid, lengths = _setup(tmp_path)

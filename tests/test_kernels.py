@@ -48,6 +48,30 @@ def test_split_attention_sweep(b, hq, hkv, sq, d, causal, window, boundary,
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("boundary", [-1, 24])
+def test_split_attention_k_valid(boundary):
+    """Non-prefix k_valid (PreTTR's padded-query + padded-doc two-prefix
+    pattern) must mask exactly, on top of the split boundary."""
+    b, hq, hkv, sq, d = 2, 4, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(ks[0], (b, hq, sq, d))
+    k = jax.random.normal(ks[1], (b, hkv, sq, d))
+    v = jax.random.normal(ks[2], (b, hkv, sq, d))
+    pos = jnp.arange(sq)[None]
+    # two valid prefixes: [0, q_len) and [24, 24 + d_len)
+    q_len = jnp.asarray([[13], [24]])
+    d_len = jnp.asarray([[30], [17]])
+    k_valid = (pos < q_len) | ((pos >= 24) & (pos < 24 + d_len))
+    out = split_flash_attention(q, k, v, None, k_valid,
+                                seg_boundary=boundary,
+                                block_q=16, block_k=16)
+    lengths = jnp.asarray([54, 41], jnp.int32)   # last valid index + 1
+    ref = split_attention_ref(q, k, v, lengths, k_valid,
+                              seg_boundary=boundary)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,hq,hkv,s,d,window", [
     (2, 8, 2, 256, 32, -1),
@@ -65,6 +89,24 @@ def test_decode_attention_sweep(b, hq, hkv, s, d, window, dtype):
     ref = decode_attention_ref(q, k, v, lengths, window=window)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_k_valid():
+    """Flash decode with a non-prefix k_valid mask (the CLS-only final
+    layer's padded-segment layout)."""
+    b, hq, hkv, s, d = 2, 4, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d))
+    k = jax.random.normal(ks[1], (b, hkv, s, d))
+    v = jax.random.normal(ks[2], (b, hkv, s, d))
+    pos = jnp.arange(s)[None]
+    k_valid = (pos < jnp.asarray([[40], [11]])) \
+        | ((pos >= 64) & (pos < jnp.asarray([[100], [80]])))
+    out = flash_decode_attention(q, k, v, None, k_valid, block_k=32)
+    lengths = jnp.asarray([100, 80], jnp.int32)
+    ref = decode_attention_ref(q, k, v, lengths, k_valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("t,d,e", [(100, 64, 16), (256, 768, 128),

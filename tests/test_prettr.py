@@ -19,10 +19,18 @@ from repro.core.compression import (init_compressor, compress, decompress,
                                     attention_mse_loss)
 
 
-def _cfg(l=2, compress_dim=0, n_layers=4, store_dtype=jnp.float32):
+BACKENDS = ["plain", "blocked", "pallas"]   # pallas: interpret mode on CPU
+
+
+def _cfg(l=2, compress_dim=0, n_layers=4, store_dtype=jnp.float32,
+         backend="blocked", n_kv_heads=None):
+    from repro.models.backend import impls_for
+    attn_impl, compress_impl = impls_for(backend)
     bb = make_backbone(n_layers=n_layers, d_model=64, n_heads=4, d_ff=128,
                        vocab_size=512, l=l, max_len=64,
-                       compute_dtype=jnp.float32, block_kv=16, remat_block=2)
+                       compute_dtype=jnp.float32, block_kv=16, remat_block=2,
+                       n_kv_heads=n_kv_heads, attn_impl=attn_impl,
+                       compress_impl=compress_impl)
     return PreTTRConfig(backbone=bb, l=l, max_query_len=8, max_doc_len=24,
                         compress_dim=compress_dim, store_dtype=store_dtype)
 
@@ -43,12 +51,16 @@ def _inputs(key, cfg, batch=3):
     return q, d, q_valid, d_valid, tokens, segs, valid
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("l", [0, 1, 2, 3])
 @pytest.mark.parametrize("compress_dim", [0, 16])
-def test_joint_equals_split(l, compress_dim):
-    """THE PreTTR invariant: joint split-mask forward == precompute + join."""
+def test_joint_equals_split(l, compress_dim, backend):
+    """THE PreTTR invariant: joint split-mask forward == precompute + join —
+    under every compute backend (pallas runs the flash/fused kernels in
+    interpret mode on CPU)."""
     cfg = _cfg(l=l, compress_dim=compress_dim,
-               store_dtype=jnp.float32 if not compress_dim else jnp.float16)
+               store_dtype=jnp.float32 if not compress_dim else jnp.float16,
+               backend=backend)
     params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
     q, d, qv, dv, tokens, segs, valid = _inputs(jax.random.PRNGKey(1), cfg)
     s_joint = rank_forward(params, cfg, tokens, segs, valid)
@@ -58,6 +70,37 @@ def test_joint_equals_split(l, compress_dim):
     tol = 1e-4 if not compress_dim else 5e-3   # fp16 store rounding
     np.testing.assert_allclose(np.asarray(s_joint), np.asarray(s_split),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_joint_equals_split_gqa_backends(backend):
+    """The invariant with a GQA backbone (n_kv_heads < n_heads): the
+    backend layer must route grouped K/V through every impl."""
+    cfg = _cfg(l=2, compress_dim=16, store_dtype=jnp.float16,
+               backend=backend, n_kv_heads=2)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    q, d, qv, dv, tokens, segs, valid = _inputs(jax.random.PRNGKey(1), cfg)
+    s_joint = rank_forward(params, cfg, tokens, segs, valid)
+    store = precompute_docs(params, cfg, d, dv)
+    s_split = join_and_score(params, cfg, encode_query(params, cfg, q, qv),
+                             qv, store, dv)
+    np.testing.assert_allclose(np.asarray(s_joint), np.asarray(s_split),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_backends_agree_on_scores():
+    """Cross-backend parity: the same params must score (numerically) the
+    same under plain / blocked / pallas."""
+    ref = None
+    for backend in BACKENDS:
+        cfg = _cfg(l=2, compress_dim=0, backend=backend)
+        params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+        *_, tokens, segs, valid = _inputs(jax.random.PRNGKey(1), cfg)
+        s = np.asarray(rank_forward(params, cfg, tokens, segs, valid))
+        if ref is None:
+            ref = s
+        else:
+            np.testing.assert_allclose(s, ref, rtol=2e-4, atol=2e-4)
 
 
 def test_doc_reps_query_independent():
