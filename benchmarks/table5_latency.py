@@ -12,6 +12,13 @@ compute backend (``repro.models.backend``), so the Query/Decompress/Combine
 split can be compared per backend; off-TPU "pallas" runs the kernels in
 interpret mode (slow in absolute terms — use the size flags for smokes).
 
+``--service`` measures *throughput* instead of the single-query split: it
+builds a small on-disk index and drives the ``RankingService`` with
+``--concurrency`` queries in flight per wave, reporting QPS and p50/p99
+request latency.  Packing candidates from concurrent queries into shared
+micro-batches means fewer (and fuller) device dispatches, so QPS at
+``--concurrency 8`` should beat ``--concurrency 1`` even on CPU.
+
 A bigger backbone than the quality benchmarks is used so compute dominates
 dispatch overhead.
 """
@@ -20,6 +27,7 @@ from __future__ import annotations
 import argparse
 import os
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -119,6 +127,74 @@ def run(backend: str = "blocked", n_layers: int = N_LAYERS,
     return rows
 
 
+def run_service(backend: str = "blocked", concurrency: int = 8,
+                n_queries: int = 16, candidates: int = 16,
+                micro_batch: int = 32, n_layers: int = 4, d_model: int = 64,
+                l: int = 2, max_q: int = 16, max_d: int = 48,
+                n_docs: int = 128) -> dict:
+    """QPS / p50 / p99 of the RankingService under ``concurrency`` queries
+    per scheduling wave (cross-query micro-batch packing + prefetch)."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.core.prettr import PreTTRConfig, init_prettr, precompute_docs
+    from repro.index import TermRepIndex
+    from repro.serving import RankingService, RankRequest
+
+    attn_impl, compress_impl = impls_for(backend)
+    e = d_model // 4
+    bb = make_backbone(n_layers=n_layers, d_model=d_model, n_heads=4,
+                       d_ff=4 * d_model, vocab_size=1024, l=l,
+                       max_len=max_q + max_d, compute_dtype=jnp.float32,
+                       block_kv=32, attn_impl=attn_impl,
+                       compress_impl=compress_impl)
+    cfg = PreTTRConfig(backbone=bb, l=l, max_query_len=max_q,
+                       max_doc_len=max_d, compress_dim=e)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    docs = jax.random.randint(key, (n_docs, max_d), 5, 1000)
+    dvalid = jnp.ones((n_docs, max_d), bool)
+    reps = precompute_docs(params, cfg, docs, dvalid)
+
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory() as tmp:
+        idx = TermRepIndex(tmp, rep_dim=e, dtype="float16", l=l,
+                           compressed=True, max_doc_len=max_d)
+        idx.add_docs(np.asarray(reps), [max_d] * n_docs)
+        idx.finalize()
+        idx = TermRepIndex.open(tmp)
+
+        svc = RankingService(params, cfg, idx, micro_batch=micro_batch)
+        queries = [np.asarray(rng.integers(5, 1000, size=max_q), np.int32)
+                   for _ in range(n_queries)]
+        cand_lists = [list(rng.integers(0, n_docs, size=candidates))
+                      for _ in range(n_queries)]
+        qv = np.ones((max_q,), bool)
+        # warm the jit caches (encode + packed join shape) off the clock
+        svc.rank(queries[0], qv, cand_lists[0], request_id="warmup")
+        svc.reset_stats()
+
+        lat_s = []
+        t0 = time.perf_counter()
+        for lo in range(0, n_queries, concurrency):
+            for qi in range(lo, min(lo + concurrency, n_queries)):
+                svc.submit(RankRequest(queries[qi], qv, cand_lists[qi],
+                                       request_id=str(qi)))
+            lat_s += [r.latency_s for r in svc.drain()]
+        wall = time.perf_counter() - t0
+    p50, p99 = (float(v) for v in np.percentile(lat_s, [50, 99]))
+    row = {"backend": backend, "concurrency": concurrency, "qps":
+           n_queries / wall, "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3,
+           "n_batches": svc.stats.n_batches,
+           "pack_fill": svc.stats.pack_fill}
+    print(f"[table5] service {backend} concurrency={concurrency}: "
+          f"QPS={row['qps']:.2f} p50={row['p50_ms']:.1f}ms "
+          f"p99={row['p99_ms']:.1f}ms "
+          f"(batches={row['n_batches']} pack_fill={row['pack_fill']:.2f})")
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--backend", default="blocked",
@@ -129,7 +205,23 @@ def main() -> None:
     ap.add_argument("--docs", type=int, default=N_DOCS)
     ap.add_argument("--max-l", type=int, default=None,
                     help="stop the l sweep at this split (smoke runs)")
+    ap.add_argument("--service", action="store_true",
+                    help="measure RankingService QPS/p50/p99 instead of the "
+                         "per-query phase split")
+    ap.add_argument("--concurrency", type=int, default=8,
+                    help="--service: queries in flight per wave")
+    ap.add_argument("--queries", type=int, default=16,
+                    help="--service: total queries to serve")
+    ap.add_argument("--candidates", type=int, default=16,
+                    help="--service: candidates per query")
+    ap.add_argument("--micro-batch", type=int, default=32,
+                    help="--service: packed micro-batch rows")
     args = ap.parse_args()
+    if args.service:
+        run_service(backend=args.backend, concurrency=args.concurrency,
+                    n_queries=args.queries, candidates=args.candidates,
+                    micro_batch=args.micro_batch)
+        return
     sizes = dict(n_layers=args.layers, d_model=args.d_model,
                  n_docs=args.docs, max_l=args.max_l)
     if (args.backend == "pallas" and jax.default_backend() != "tpu"

@@ -4,6 +4,9 @@ reporting the Table-5-style phase breakdown (query / load / combine).
 Run: PYTHONPATH=src python examples/serve_prettr.py [--n-docs N ...]
 Command-line flags override the example defaults (argparse keeps the last
 occurrence), so e.g. ``--n-docs 64 --n-queries 2`` gives a quick smoke run.
+``--service --concurrency 8`` serves through the RankingService API
+(cross-query micro-batch packing + overlapped index prefetch) and reports
+QPS with p50/p99 request latency instead of the sequential per-query loop.
 """
 import sys
 

@@ -26,12 +26,19 @@ class TermRepIndex:
         self.compressed = compressed
         self.max_doc_len = max_doc_len
         self._offsets: list[tuple[int, int]] = []   # (token offset, n_tokens)
+        self._offsets_np = None                      # cached [N, 2] view
         self._write_handle = None
         self._mmap = None
         self._n_tokens = 0
+        self._readonly = False
 
     # -- build (index time) --------------------------------------------------
     def _open_write(self):
+        if self._readonly:
+            # a 'wb' reopen would truncate reps.bin and corrupt the index
+            raise RuntimeError(
+                "TermRepIndex is read-only: add_docs() after finalize() or "
+                "open() would truncate reps.bin; build a new index instead")
         os.makedirs(self.path, exist_ok=True)
         if self._write_handle is None:
             self._write_handle = open(os.path.join(self.path, "reps.bin"), "wb")
@@ -39,6 +46,7 @@ class TermRepIndex:
     def add_docs(self, reps: np.ndarray, lengths: Sequence[int]):
         """reps: [N, Ld, e] (padded); lengths: true token counts."""
         self._open_write()
+        self._offsets_np = None
         reps = np.asarray(reps, self.dtype)
         for i, n in enumerate(lengths):
             block = np.ascontiguousarray(reps[i, :n])
@@ -47,6 +55,8 @@ class TermRepIndex:
             self._n_tokens += int(n)
 
     def finalize(self):
+        if self._readonly:
+            raise RuntimeError("finalize() on an already-finalized index")
         if self._write_handle is None:
             if self._offsets:         # 'wb' reopen would truncate reps.bin
                 raise RuntimeError("finalize() on an already-finalized index")
@@ -61,6 +71,7 @@ class TermRepIndex:
                 "offsets": self._offsets}
         with open(os.path.join(self.path, "meta.msgpack"), "wb") as f:
             f.write(msgpack.packb(meta))
+        self._readonly = True
 
     # -- serve (query time) ----------------------------------------------------
     @classmethod
@@ -71,6 +82,7 @@ class TermRepIndex:
                   meta["compressed"], meta["max_doc_len"])
         idx._offsets = [tuple(o) for o in meta["offsets"]]
         idx._n_tokens = sum(n for _, n in idx._offsets)
+        idx._readonly = True
         if idx._n_tokens:
             idx._mmap = np.memmap(os.path.join(path, "reps.bin"),
                                   dtype=idx.dtype, mode="r",
@@ -82,18 +94,45 @@ class TermRepIndex:
     def __len__(self):
         return len(self._offsets)
 
-    def load_docs(self, doc_ids: Sequence[int], pad_to: int | None = None):
-        """-> (reps [N, Ld, e], valid [N, Ld]) padded batch for join_and_score."""
-        pad_to = pad_to or self.max_doc_len or max(
-            (self._offsets[d][1] for d in doc_ids), default=1)
-        out = np.zeros((len(doc_ids), pad_to, self.rep_dim), self.dtype)
-        valid = np.zeros((len(doc_ids), pad_to), bool)
-        for i, d in enumerate(doc_ids):
-            off, n = self._offsets[d]
-            n = min(n, pad_to)
-            out[i, :n] = self._mmap[off: off + n]
-            valid[i, :n] = True
+    def gather(self, doc_ids: Sequence[int], pad_to: int | None = None):
+        """Batched vectorized read: one fancy-index gather over the memmap
+        (no per-doc Python loop) -> (reps [N, Ld, e], valid [N, Ld]).
+
+        This is the hot host-side path of serving — both the
+        ``RankingService`` prefetcher (which stages batches while the
+        device computes) and ``Reranker``/``load_docs`` go through it."""
+        if self._mmap is None:
+            raise RuntimeError(
+                "index is not open for reading: finalize() and open() it")
+        ids = np.asarray(list(doc_ids), np.int64).reshape(-1)
+        if self._offsets_np is None:
+            self._offsets_np = (np.asarray(self._offsets, np.int64)
+                                if self._offsets
+                                else np.zeros((0, 2), np.int64))
+        if ids.size and (ids.min() < 0 or ids.max() >= len(self._offsets)):
+            raise IndexError(
+                f"doc id out of range [0, {len(self._offsets)}) in gather()")
+        pad_to = pad_to or self.max_doc_len or int(max(
+            (self._offsets[d][1] for d in ids), default=1))
+        out = np.zeros((ids.size, pad_to, self.rep_dim), self.dtype)
+        valid = np.zeros((ids.size, pad_to), bool)
+        if ids.size == 0:
+            return out, valid
+        starts = self._offsets_np[ids, 0]
+        lens = np.minimum(self._offsets_np[ids, 1], pad_to)
+        total = int(lens.sum())
+        if total:
+            rows = np.repeat(np.arange(ids.size), lens)
+            cols = np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
+            out[rows, cols] = self._mmap[np.repeat(starts, lens) + cols]
+            valid[rows, cols] = True
         return out, valid
+
+    def load_docs(self, doc_ids: Sequence[int], pad_to: int | None = None):
+        """-> (reps [N, Ld, e], valid [N, Ld]) padded batch for
+        join_and_score.  Alias of :meth:`gather` (kept for callers of the
+        original per-doc API)."""
+        return self.gather(doc_ids, pad_to=pad_to)
 
     # -- accounting (paper §6.2) -----------------------------------------------
     def storage_bytes(self) -> int:

@@ -4,6 +4,12 @@ Phases (paper Fig. 1):
   1. index: precompute doc term reps through layers 0..l, compress, store.
   2. serve: per query — encode once, load candidates, join, rank; report
      per-phase latency (Table 5's Query / Decompress / Combine split).
+
+``--service`` switches phase 2 from the sequential per-query ``Reranker``
+loop to the ``RankingService`` request/response API: ``--concurrency N``
+queries are admitted at a time, their candidates are packed into shared
+micro-batches while the prefetcher overlaps index reads with device
+compute, and throughput is reported as QPS with p50/p99 request latency.
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ def main() -> None:
     from repro.core.prettr import init_prettr, precompute_docs
     from repro.data.synthetic_ir import SyntheticIRWorld, precision_at_k
     from repro.index import TermRepIndex
-    from repro.serving import Reranker
+    from repro.serving import Reranker, RankingService, RankRequest
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--l", type=int, default=2)
@@ -36,6 +42,12 @@ def main() -> None:
                     choices=["plain", "blocked", "pallas"],
                     help="compute backend for indexing and serving "
                          "(pallas = flash/fused kernels; interpret off-TPU)")
+    ap.add_argument("--service", action="store_true",
+                    help="serve through the RankingService API (cross-query "
+                         "micro-batch packing + prefetch) instead of the "
+                         "sequential Reranker loop")
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="--service: queries admitted per scheduling wave")
     args = ap.parse_args()
 
     from repro.models.backend import impls_for
@@ -74,15 +86,49 @@ def main() -> None:
           f"{idx.storage_bytes() * cfg.backbone.d_model * 2 / max(e,1) / 2**20:.1f} MiB)")
 
     # ---- phase 2: serve -----------------------------------------------------
-    rr = Reranker(params, cfg, idx, micro_batch=args.micro_batch)
-    lat, p20 = [], []
-    for qi in range(world.n_queries):
-        cands = list(world.candidates(qi, k=args.candidates))
+    def pack_query(qi):
         q = np.zeros(cfg.max_query_len, np.int32)
         packed = np.concatenate([[1], world.queries[qi], [2]])[
             : cfg.max_query_len]
         q[: len(packed)] = packed
         qv = np.arange(cfg.max_query_len) < len(packed)
+        return q, qv
+
+    if args.service:
+        svc = RankingService(params, cfg, idx, micro_batch=args.micro_batch)
+        # warm the jit caches (encode + the packed join shape) off the clock
+        q0, qv0 = pack_query(0)
+        svc.rank(q0, qv0, list(world.candidates(0, k=args.candidates)),
+                 request_id="warmup")
+        svc.reset_stats()
+        lat_s, p20 = [], []
+        t0 = time.perf_counter()
+        for lo in range(0, world.n_queries, args.concurrency):
+            for qi in range(lo, min(lo + args.concurrency, world.n_queries)):
+                q, qv = pack_query(qi)
+                svc.submit(RankRequest(
+                    q, qv, list(world.candidates(qi, k=args.candidates)),
+                    request_id=str(qi)))
+            for resp in svc.drain():
+                qi = int(resp.request_id)
+                lat_s.append(resp.latency_s)
+                p20.append(precision_at_k(
+                    world.qrels[qi][np.asarray(resp.doc_ids)], 20))
+        wall = time.perf_counter() - t0
+        p50, p99 = np.percentile(lat_s, [50, 99])
+        s = svc.stats
+        print(f"[serve] service mode: {len(lat_s)} queries x "
+              f"{args.candidates} candidates, concurrency={args.concurrency}"
+              f" | QPS={len(lat_s)/wall:.2f} p50={p50*1e3:.1f}ms "
+              f"p99={p99*1e3:.1f}ms | batches={s.n_batches} "
+              f"pack_fill={s.pack_fill:.2f} | P@20={np.mean(p20):.3f}")
+        return
+
+    rr = Reranker(params, cfg, idx, micro_batch=args.micro_batch)
+    lat, p20 = [], []
+    for qi in range(world.n_queries):
+        cands = list(world.candidates(qi, k=args.candidates))
+        q, qv = pack_query(qi)
         ranked, scores, stats = rr.rerank(q, qv, cands)
         lat.append(stats)
         p20.append(precision_at_k(world.qrels[qi][np.asarray(ranked)], 20))

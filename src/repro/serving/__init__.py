@@ -1,4 +1,10 @@
-"""Query-time serving: the PreTTR re-ranker."""
-from repro.serving.reranker import Reranker, RerankStats
+"""Query-time serving: the RankingService API and the legacy Reranker."""
+from repro.serving.reranker import Reranker
+from repro.serving.service import (DeadlinePriorityPolicy, RankingService,
+                                   RankRequest, RankResponse, RerankStats,
+                                   SchedulerPolicy, ServiceStats,
+                                   validate_index_compat)
 
-__all__ = ["Reranker", "RerankStats"]
+__all__ = ["RankingService", "RankRequest", "RankResponse", "RerankStats",
+           "SchedulerPolicy", "DeadlinePriorityPolicy", "ServiceStats",
+           "Reranker", "validate_index_compat"]

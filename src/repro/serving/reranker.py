@@ -1,135 +1,75 @@
-"""PreTTR re-ranking server (paper Fig. 1, step 3).
+"""PreTTR re-ranking client (paper Fig. 1, step 3) — back-compat shim.
 
-Per query: encode the query through layers 0..l **once**, load the
-candidates' precomputed reps from the index, and run join_and_score over
-candidate batches.  The query-rep cache is the paper's "query representations
-are re-used among all the documents that are re-ranked".
+.. deprecated::
+    ``Reranker`` is now a thin *single-query client* of
+    :class:`repro.serving.service.RankingService`; new code should use the
+    service directly — it exposes the same per-query behaviour plus
+    admission queueing, cross-query micro-batch packing, overlapped index
+    prefetch, and pluggable scheduling (``SchedulerPolicy``).
 
-Production details modeled here:
-
-* fixed candidate micro-batches (jit cache hits — no shape churn),
-* a query-rep LRU cache across repeated queries,
-* straggler mitigation: per-microbatch deadline; a batch overshooting the
-  deadline is split in half and re-dispatched (bounded retries) — on a real
-  pod this re-routes around a slow host; on CPU it demonstrates the policy,
-* stats: per-phase timings matching Table 5's Query/Decompress/Combine split.
+The public surface is unchanged: ``Reranker(params, cfg, index, ...)`` and
+``rerank(q_tokens, q_valid, doc_ids) -> (ranked_ids, scores, RerankStats)``.
+Each ``rerank`` call submits one :class:`RankRequest` to a private service
+and drains it, so per-query numerics, the query-rep LRU cache, the fixed
+micro-batch shapes, and the deadline/split straggler policy (now the
+default ``SchedulerPolicy``) all behave exactly as before.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import OrderedDict
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import prettr as P
 from repro.index.store import TermRepIndex
+from repro.serving.service import RankingService, RerankStats  # noqa: F401
 
-
-@dataclasses.dataclass
-class RerankStats:
-    query_encode_s: float = 0.0
-    load_s: float = 0.0
-    combine_s: float = 0.0
-    n_docs: int = 0
-    n_redispatch: int = 0
-
-    @property
-    def total_s(self):
-        return self.query_encode_s + self.load_s + self.combine_s
+__all__ = ["Reranker", "RerankStats"]
 
 
 class Reranker:
     def __init__(self, params, cfg: P.PreTTRConfig, index: TermRepIndex,
                  micro_batch: int = 32, deadline_s: float | None = None,
                  cache_size: int = 64, backend: str | None = None):
-        if backend is not None:
-            # serve-time compute-backend override: route encode/join/
-            # decompress through the named backend (e.g. "pallas" for the
-            # flash + fused kernels) without touching the stored config
-            from repro.models.backend import apply_backend
-            cfg = apply_backend(cfg, backend)
-        self.params = params
+        # encode/join are late-bound through the instance attributes so
+        # tests (and callers) can still monkeypatch `rr._join`/`rr._encode`
+        self._service = RankingService(
+            params, cfg, index, micro_batch=micro_batch,
+            cache_size=cache_size, backend=backend,
+            encode_fn=lambda *a: self._encode(*a),
+            join_fn=lambda *a: self._join(*a))
+        cfg = self._service.cfg            # backend override already applied
         self.cfg = cfg
         self.index = index
-        self.micro_batch = micro_batch
-        self.deadline_s = deadline_s
-        self._qcache: OrderedDict = OrderedDict()
-        self._cache_size = cache_size
+        self.deadline_s = deadline_s       # read per rerank(): stays mutable
 
         self._encode = jax.jit(
             lambda p, t, v: P.encode_query(p, cfg, t, v))
         self._join = jax.jit(
             lambda p, qr, qv, st, dv: P.join_and_score(p, cfg, qr, qv, st, dv))
 
-    # -- query side ----------------------------------------------------------
-    def _query_reps(self, q_tokens: np.ndarray, q_valid: np.ndarray):
-        key = (q_tokens.tobytes(), q_valid.tobytes())
-        if key in self._qcache:
-            self._qcache.move_to_end(key)
-            return self._qcache[key]
-        reps = self._encode(self.params, q_tokens[None], q_valid[None])
-        reps.block_until_ready()
-        self._qcache[key] = reps
-        if len(self._qcache) > self._cache_size:
-            self._qcache.popitem(last=False)
-        return reps
+    # params/micro_batch proxy the service so post-construction mutation
+    # keeps affecting subsequent rerank() calls (as on the original class)
+    @property
+    def params(self):
+        return self._service.params
 
-    # -- scoring -------------------------------------------------------------
-    def _score_batch(self, q_reps, q_valid, doc_ids: Sequence[int],
-                     stats: RerankStats, depth: int = 0) -> np.ndarray:
-        t0 = time.perf_counter()
-        reps, dvalid = self.index.load_docs(doc_ids, pad_to=self.cfg.max_doc_len)
-        load_dt = time.perf_counter() - t0
-        stats.load_s += load_dt
+    @params.setter
+    def params(self, value):
+        self._service.params = value
 
-        t0 = time.perf_counter()
-        n = len(doc_ids)
-        qr = jnp.broadcast_to(q_reps, (n, *q_reps.shape[1:]))
-        qv = jnp.broadcast_to(q_valid[None], (n, q_valid.shape[0]))
-        scores = self._join(self.params, qr, qv, jnp.asarray(reps),
-                            jnp.asarray(dvalid))
-        scores = np.asarray(jax.device_get(scores))
-        dt = time.perf_counter() - t0
-        stats.combine_s += dt
+    @property
+    def micro_batch(self):
+        return self._service.micro_batch
 
-        # straggler mitigation: split + re-dispatch an overshooting batch
-        if (self.deadline_s is not None and dt > self.deadline_s
-                and len(doc_ids) > 1 and depth < 2):
-            # the overshooting attempt's scores are discarded, so back its
-            # timings out of the Table-5 split — only the re-dispatched
-            # halves (whose results are returned) may count
-            stats.combine_s -= dt
-            stats.load_s -= load_dt
-            stats.n_redispatch += 1
-            mid = len(doc_ids) // 2
-            a = self._score_batch(q_reps, q_valid, doc_ids[:mid], stats, depth + 1)
-            b = self._score_batch(q_reps, q_valid, doc_ids[mid:], stats, depth + 1)
-            return np.concatenate([a, b])
-        return scores
+    @micro_batch.setter
+    def micro_batch(self, value):
+        self._service.micro_batch = value
 
     def rerank(self, q_tokens: np.ndarray, q_valid: np.ndarray,
                doc_ids: Sequence[int]):
         """-> (doc_ids sorted by descending score, scores, stats)."""
-        stats = RerankStats(n_docs=len(doc_ids))
-        if not len(doc_ids):          # nothing to rank; keep shapes consistent
-            return [], np.zeros((0,), np.float32), stats
-        t0 = time.perf_counter()
-        q_reps = self._query_reps(q_tokens, q_valid)
-        stats.query_encode_s = time.perf_counter() - t0
-        q_valid_j = jnp.asarray(q_valid)
-
-        scores = []
-        ids = list(doc_ids)
-        # pad the tail so every microbatch has the same (jit-cached) shape
-        pad = (-len(ids)) % self.micro_batch
-        padded = ids + ids[:1] * pad
-        for i in range(0, len(padded), self.micro_batch):
-            chunk = padded[i: i + self.micro_batch]
-            scores.append(self._score_batch(q_reps, q_valid_j, chunk, stats))
-        scores = np.concatenate(scores)[: len(ids)]
-        order = np.argsort(-scores)
-        return [ids[i] for i in order], scores[order], stats
+        resp = self._service.rank(q_tokens, q_valid, doc_ids,
+                                  deadline_s=self.deadline_s)
+        return resp.doc_ids, resp.scores, resp.stats

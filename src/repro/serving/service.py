@@ -1,0 +1,531 @@
+"""RankingService: the request/response serving surface for PreTTR.
+
+The paper's 42x win (Table 5) is a *per-query* cost split — Query encode /
+Decompress / Combine — but a production server amortizes it across many
+concurrent queries.  This module turns the one-query-at-a-time
+``Reranker.rerank`` loop into a service:
+
+* **Admission** — typed :class:`RankRequest` objects enter a queue
+  (``submit``); each query is encoded through layers ``0..l`` once, via an
+  LRU query-rep cache (Table 5's "Query" phase, shared across repeats).
+* **Packing** — the scheduler packs candidate rows from *multiple in-flight
+  queries* into shared fixed-shape micro-batches.  ``join_and_score``
+  already takes per-row ``q_reps``, so a packed batch just gathers each
+  row's query reps from the cache — one jit cache entry regardless of how
+  traffic interleaves, and no model change.
+* **Overlapped I/O** — a prefetch thread pulls the next batches' term reps
+  from the :class:`~repro.index.store.TermRepIndex` (``gather`` — Table 5's
+  "Decompress"-adjacent host load) and ``jax.device_put``\\ s them while the
+  device runs the previous batch's Combine phase (layers ``l..n`` + the
+  CLS-only final layer).  Double-buffered: the output queue holds at most
+  ``prefetch_depth`` staged batches.
+* **Straggler policy** — the per-batch deadline / split-and-redispatch
+  behaviour that used to live inline in ``Reranker`` is a pluggable
+  :class:`SchedulerPolicy` (ordering, batch deadline, split).
+
+Per-request phase timings (:class:`RerankStats`) keep the Table-5 split:
+``query_encode_s`` (Query), ``load_s`` (index gather + H2D + packed q-rep
+assembly — overlapped with device compute, so phase sums can exceed wall
+clock), ``combine_s`` (Decompress + Combine on device).
+
+Equivalence invariant (tests/test_service.py): for any workload, the packed
+service returns per query exactly what a sequential ``Reranker.rerank``
+returns — rows are batch-independent in ``join_and_score``, so packing
+changes throughput, never scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import Counter, OrderedDict, deque
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prettr as P
+from repro.index.store import TermRepIndex
+
+
+# ---------------------------------------------------------------------------
+# Typed API surface
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RankRequest:
+    """One re-ranking query: tokens + candidate doc ids, with scheduling
+    hints.  ``priority``: lower = scheduled earlier.  ``deadline_s``: per-
+    micro-batch combine deadline driving the straggler policy (falls back
+    to the service default)."""
+    q_tokens: np.ndarray                  # [Lq] int tokens, padded
+    q_valid: np.ndarray                   # [Lq] bool
+    doc_ids: Sequence[int]
+    request_id: str | None = None         # auto-assigned if None
+    priority: int = 0
+    deadline_s: float | None = None
+
+
+@dataclasses.dataclass
+class RerankStats:
+    """Per-request phase split matching paper Table 5 (Query / load+H2D /
+    Decompress+Combine).  For packed batches each request is attributed its
+    row-proportional share of the batch time."""
+    query_encode_s: float = 0.0
+    load_s: float = 0.0
+    combine_s: float = 0.0
+    n_docs: int = 0
+    n_redispatch: int = 0
+
+    @property
+    def total_s(self):
+        return self.query_encode_s + self.load_s + self.combine_s
+
+
+@dataclasses.dataclass
+class RankResponse:
+    request_id: str
+    doc_ids: list[int]                    # sorted by descending score
+    scores: np.ndarray                    # [n] float32, same order
+    stats: RerankStats
+    latency_s: float = 0.0                # submit -> completion wall time
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Aggregate scheduler counters across all drained batches."""
+    n_requests: int = 0
+    n_batches: int = 0                    # accepted (non-redispatched) batches
+    n_rows: int = 0                       # real candidate rows scored
+    n_pad_rows: int = 0                   # shape-padding rows
+    n_redispatch: int = 0
+    query_encode_s: float = 0.0
+    load_s: float = 0.0
+    combine_s: float = 0.0
+    discarded_s: float = 0.0              # time spent on overshooting attempts
+    wall_s: float = 0.0                   # total time inside drain()
+
+    @property
+    def pack_fill(self) -> float:
+        """Fraction of scored batch rows that were real candidates."""
+        return self.n_rows / max(1, self.n_rows + self.n_pad_rows)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler policy (pluggable)
+# ---------------------------------------------------------------------------
+
+
+class SchedulerPolicy:
+    """Packing order + straggler policy.
+
+    The default is the policy that used to live inline in ``Reranker``:
+    FIFO admission (priority-, then arrival-ordered), and a per-batch
+    deadline under which an overshooting micro-batch is split in half and
+    re-dispatched (bounded depth) — on a real pod the halves re-route
+    around a slow host; on CPU the mechanism is what's demonstrated.
+    Subclass to change ordering (:meth:`admission_key`), the effective
+    batch deadline (:meth:`batch_deadline`), or the split shape
+    (:meth:`split`)."""
+
+    def __init__(self, max_split_depth: int = 2):
+        self.max_split_depth = max_split_depth
+
+    def admission_key(self, state: "_ReqState"):
+        return (state.priority, state.seq)
+
+    def batch_deadline(self, deadlines: Sequence[float | None]) -> float | None:
+        """Effective deadline for a packed batch: the tightest row deadline."""
+        ds = [d for d in deadlines if d is not None]
+        return min(ds) if ds else None
+
+    def should_redispatch(self, elapsed_s: float, deadline_s: float | None,
+                          n_rows: int, depth: int) -> bool:
+        return (deadline_s is not None and elapsed_s > deadline_s
+                and n_rows > 1 and depth < self.max_split_depth)
+
+    def split(self, rows: list) -> list[list]:
+        mid = len(rows) // 2
+        return [rows[:mid], rows[mid:]]
+
+
+class DeadlinePriorityPolicy(SchedulerPolicy):
+    """Order admission by (priority, tightest deadline, arrival) so urgent
+    requests' rows land in the earliest packed batches."""
+
+    def admission_key(self, state: "_ReqState"):
+        d = state.deadline_s if state.deadline_s is not None else float("inf")
+        return (state.priority, d, state.seq)
+
+
+# ---------------------------------------------------------------------------
+# Internal per-request / per-batch state
+# ---------------------------------------------------------------------------
+
+
+class _ReqState:
+    __slots__ = ("req", "rid", "seq", "n", "priority", "deadline_s",
+                 "q_reps", "q_valid_j", "scores", "n_done", "t_submit",
+                 "stats")
+
+    def __init__(self, req: RankRequest, rid: str, seq: int,
+                 deadline_s: float | None):
+        self.req = req
+        self.rid = rid
+        self.seq = seq
+        self.n = len(req.doc_ids)
+        self.priority = req.priority
+        self.deadline_s = deadline_s
+        self.q_reps = None                # [1, Lq, d] device array
+        self.q_valid_j = None             # [Lq] device array
+        self.scores = np.zeros(self.n, np.float32)
+        self.n_done = 0
+        self.t_submit = time.perf_counter()
+        self.stats = RerankStats(n_docs=self.n)
+
+
+@dataclasses.dataclass
+class _Plan:
+    """One planned micro-batch: rows are (state | None, cand_idx, doc_id);
+    ``state is None`` marks a shape-padding row (its score is discarded)."""
+    rows: list
+    depth: int = 0
+
+
+_STOP = object()
+
+
+# ---------------------------------------------------------------------------
+# Index-vs-config compatibility (satellite: no silent truncation)
+# ---------------------------------------------------------------------------
+
+
+def validate_index_compat(cfg: P.PreTTRConfig, index: TermRepIndex) -> None:
+    """Raise ValueError when an opened index cannot be served under ``cfg``.
+
+    ``load_docs(pad_to=cfg.max_doc_len)`` would otherwise silently truncate
+    documents indexed under a larger ``max_doc_len``, and mismatched
+    ``rep_dim`` / ``l`` / compression would produce garbage scores instead
+    of an error."""
+    if bool(index.compressed) != bool(cfg.compress_dim):
+        raise ValueError(
+            f"index compressed={bool(index.compressed)} but config "
+            f"compress_dim={cfg.compress_dim} — reps would be "
+            f"(de)compressed with the wrong path")
+    e = cfg.compress_dim or cfg.backbone.d_model
+    if index.rep_dim != e:
+        raise ValueError(
+            f"index rep_dim={index.rep_dim} does not match the config's "
+            f"stored-rep width {e} (compress_dim or d_model)")
+    if index.l != cfg.l:
+        raise ValueError(
+            f"index was precomputed through l={index.l} layers but the "
+            f"config joins at l={cfg.l}; re-index or change the config")
+    # indexes built without an explicit max_doc_len record 0 — fall back to
+    # the longest stored document so truncation still cannot slip through
+    idx_max = index.max_doc_len or max(
+        (n for _, n in index._offsets), default=0)
+    if idx_max > cfg.max_doc_len:
+        raise ValueError(
+            f"index max_doc_len={idx_max} exceeds config "
+            f"max_doc_len={cfg.max_doc_len}: serving would silently "
+            f"truncate stored documents")
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+
+class RankingService:
+    """Request/response re-ranking service over a :class:`TermRepIndex`.
+
+    Usage::
+
+        svc = RankingService(params, cfg, index, micro_batch=32)
+        rid = svc.submit(RankRequest(q_tokens, q_valid, doc_ids))
+        for resp in svc.drain():          # processes everything queued
+            ...
+        # or, single query: svc.rank(q_tokens, q_valid, doc_ids)
+
+    ``drain`` runs the scheduler: candidate rows from every queued request
+    are packed into fixed ``micro_batch``-row batches (cross-query), the
+    prefetch thread stages each planned batch's index blocks + H2D copy
+    while the device scores the previous one, and the ``policy`` handles
+    ordering and deadline-triggered re-dispatch.
+
+    ``prefetch_depth`` bounds the staged-batch pipeline (``0`` disables the
+    prefetch thread entirely: synchronous inline staging, for debugging).
+    ``backend`` routes all compute through ``repro.models.backend`` (e.g.
+    ``"pallas"`` for the flash/fused kernels) exactly as on ``Reranker``.
+    ``encode_fn`` / ``join_fn`` override the jitted model entry points
+    (used by the ``Reranker`` shim so patched-in test doubles stay live).
+    """
+
+    def __init__(self, params, cfg: P.PreTTRConfig, index: TermRepIndex, *,
+                 micro_batch: int = 32, policy: SchedulerPolicy | None = None,
+                 cache_size: int = 64, backend: str | None = None,
+                 prefetch_depth: int = 2, deadline_s: float | None = None,
+                 encode_fn: Callable | None = None,
+                 join_fn: Callable | None = None,
+                 validate_index: bool = True):
+        if backend is not None:
+            from repro.models.backend import apply_backend
+            cfg = apply_backend(cfg, backend)
+        if validate_index:
+            validate_index_compat(cfg, index)
+        self.params = params
+        self.cfg = cfg
+        self.index = index
+        self.micro_batch = micro_batch
+        self.policy = policy or SchedulerPolicy()
+        self.prefetch_depth = max(0, prefetch_depth)
+        self.default_deadline_s = deadline_s
+        self.stats = ServiceStats()
+
+        self._encode = encode_fn or jax.jit(
+            lambda p, t, v: P.encode_query(p, cfg, t, v))
+        self._join = join_fn or jax.jit(
+            lambda p, qr, qv, st, dv: P.join_and_score(p, cfg, qr, qv, st, dv))
+
+        self._qcache: OrderedDict = OrderedDict()
+        self._cache_size = cache_size
+        self._seq = 0
+        self._waiting: list[_ReqState] = []     # admitted, not yet planned
+        self._rows: deque = deque()             # planned row pool
+        self._replans: deque = deque()          # straggler re-dispatch plans
+        self._done_early: list[RankResponse] = []   # empty-candidate requests
+
+    def reset_stats(self) -> None:
+        """Zero the aggregate counters (e.g. after a jit-warmup request)."""
+        self.stats = ServiceStats()
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: RankRequest) -> str:
+        """Queue a request; returns its request id.  The query is encoded
+        (or fetched from the query-rep LRU cache) at admission time."""
+        rid = req.request_id or f"req-{self._seq}"
+        if len(req.doc_ids):
+            ids = np.asarray(req.doc_ids, np.int64)
+            if ids.min() < 0 or ids.max() >= len(self.index):
+                # reject at admission: a bad id surfacing later, inside the
+                # prefetcher, would abort drain() and lose every co-packed
+                # request's response
+                raise ValueError(
+                    f"request {rid}: doc id out of range "
+                    f"[0, {len(self.index)})")
+        state = _ReqState(req, rid, self._seq,
+                          req.deadline_s if req.deadline_s is not None
+                          else self.default_deadline_s)
+        self._seq += 1
+        self.stats.n_requests += 1
+        if state.n == 0:                   # nothing to rank; respond now
+            self._done_early.append(RankResponse(
+                request_id=rid, doc_ids=[],
+                scores=np.zeros((0,), np.float32), stats=state.stats,
+                latency_s=0.0))
+            return rid
+        t0 = time.perf_counter()
+        state.q_reps = self._query_reps(np.asarray(req.q_tokens),
+                                        np.asarray(req.q_valid))
+        dt = time.perf_counter() - t0
+        state.stats.query_encode_s = dt
+        self.stats.query_encode_s += dt
+        state.q_valid_j = jnp.asarray(req.q_valid)
+        self._waiting.append(state)
+        return rid
+
+    def rank(self, q_tokens, q_valid, doc_ids, *, priority: int = 0,
+             deadline_s: float | None = None,
+             request_id: str | None = None) -> RankResponse:
+        """Synchronous single-query convenience: submit + drain.  Note this
+        drains *every* queued request (other requests' responses are
+        buffered and returned by the next ``drain()``); concurrent traffic
+        should use ``submit``/``drain`` directly."""
+        rid = self.submit(RankRequest(q_tokens, q_valid, list(doc_ids),
+                                      request_id=request_id,
+                                      priority=priority,
+                                      deadline_s=deadline_s))
+        out = None
+        for resp in self.drain():
+            if resp.request_id == rid:
+                out = resp
+            else:                 # other callers' responses stay claimable
+                self._done_early.append(resp)
+        assert out is not None
+        return out
+
+    # -- query side ----------------------------------------------------------
+    def _query_reps(self, q_tokens: np.ndarray, q_valid: np.ndarray):
+        key = (q_tokens.tobytes(), q_valid.tobytes())
+        if key in self._qcache:
+            self._qcache.move_to_end(key)
+            return self._qcache[key]
+        reps = self._encode(self.params, q_tokens[None], q_valid[None])
+        reps.block_until_ready()
+        self._qcache[key] = reps
+        if len(self._qcache) > self._cache_size:
+            self._qcache.popitem(last=False)
+        return reps
+
+    # -- scheduling ----------------------------------------------------------
+    def _admit_waiting(self):
+        for state in sorted(self._waiting, key=self.policy.admission_key):
+            for ci, d in enumerate(state.req.doc_ids):
+                self._rows.append((state, ci, int(d)))
+        self._waiting.clear()
+
+    def _next_plan(self) -> _Plan | None:
+        if self._replans:
+            return self._replans.popleft()
+        if not self._rows:
+            return None
+        rows = [self._rows.popleft()
+                for _ in range(min(self.micro_batch, len(self._rows)))]
+        # pad to the fixed micro-batch shape (single jit cache entry);
+        # padding replicates the last real row, scores are discarded
+        pad_doc = rows[-1][2]
+        rows += [(None, -1, pad_doc)] * (self.micro_batch - len(rows))
+        return _Plan(rows=rows)
+
+    def _stage(self, plan: _Plan):
+        """Host-side staging of one planned batch: index gather, H2D copy,
+        and per-row query-rep batch assembly (padding rows replicate the
+        last real row; their scores are discarded).
+        -> (qr, qv, dreps, dval, load_dt)."""
+        t0 = time.perf_counter()
+        reps, dvalid = self.index.gather(
+            [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
+        dreps = jax.device_put(reps)
+        dval = jax.device_put(dvalid)
+        last = next(s for s, _, _ in reversed(plan.rows) if s is not None)
+        qr = jnp.concatenate(
+            [(s or last).q_reps for s, _, _ in plan.rows], axis=0)
+        qv = jnp.stack([(s or last).q_valid_j for s, _, _ in plan.rows])
+        return qr, qv, dreps, dval, time.perf_counter() - t0
+
+    def _prefetch_loop(self, in_q: queue.Queue, out_q: queue.Queue):
+        """Prefetch thread: stage the next planned batches while the device
+        scores the current one."""
+        while True:
+            plan = in_q.get()
+            if plan is _STOP:
+                return
+            try:
+                out_q.put((plan, *self._stage(plan), None))
+            except Exception as e:                    # noqa: BLE001
+                out_q.put((plan, None, None, None, None, 0.0, e))
+
+    def drain(self) -> list[RankResponse]:
+        """Run the scheduler until every queued request has a response.
+        Returns responses in completion order."""
+        t_wall = time.perf_counter()
+        done: list[RankResponse] = list(self._done_early)
+        self._done_early.clear()
+        self._admit_waiting()
+        if not self._rows and not self._replans:
+            self.stats.wall_s += time.perf_counter() - t_wall
+            return done
+        if self.prefetch_depth == 0:
+            # synchronous debug path: no prefetch thread, stage + score
+            # each batch inline
+            while True:
+                plan = self._next_plan()
+                if plan is None:
+                    break
+                self._score_plan(plan, *self._stage(plan), done)
+            self.stats.wall_s += time.perf_counter() - t_wall
+            return done
+
+        in_q: queue.Queue = queue.Queue()
+        out_q: queue.Queue = queue.Queue(maxsize=self.prefetch_depth)
+        worker = threading.Thread(
+            target=self._prefetch_loop, args=(in_q, out_q), daemon=True)
+        worker.start()
+        inflight = 0
+        try:
+            while True:
+                while inflight < self.prefetch_depth:
+                    plan = self._next_plan()
+                    if plan is None:
+                        break
+                    in_q.put(plan)
+                    inflight += 1
+                if inflight == 0:
+                    break
+                plan, qr, qv, dreps, dval, load_dt, err = out_q.get()
+                inflight -= 1
+                if err is not None:
+                    raise err
+                self._score_plan(plan, qr, qv, dreps, dval, load_dt, done)
+        finally:
+            in_q.put(_STOP)
+            # unblock a worker stuck on a full out_q before joining
+            while worker.is_alive():
+                try:
+                    out_q.get_nowait()
+                except queue.Empty:
+                    pass
+                worker.join(timeout=0.05)
+        self.stats.wall_s += time.perf_counter() - t_wall
+        return done
+
+    # -- device step ---------------------------------------------------------
+    def _score_plan(self, plan: _Plan, qr, qv, dreps, dval, load_dt: float,
+                    done: list[RankResponse]):
+        rows = plan.rows
+        t0 = time.perf_counter()
+        scores = np.asarray(jax.device_get(
+            self._join(self.params, qr, qv, dreps, dval)))
+        dt = time.perf_counter() - t0
+
+        states = [s for s, _, _ in rows if s is not None]
+        counts = Counter(id(s) for s in states)
+        uniq = {id(s): s for s in states}
+        deadline = self.policy.batch_deadline(
+            [s.deadline_s for s in uniq.values()])
+        if self.policy.should_redispatch(dt, deadline, len(rows), plan.depth):
+            # the overshooting attempt's scores are discarded — only the
+            # re-dispatched halves (whose results are returned) may count
+            # toward the Table-5 split
+            self.stats.n_redispatch += 1
+            self.stats.discarded_s += dt + load_dt
+            for s in uniq.values():
+                s.stats.n_redispatch += 1
+            halves = [_Plan(rows=h, depth=plan.depth + 1)
+                      for h in self.policy.split(rows)
+                      if any(r[0] is not None for r in h)]
+            self._replans.extendleft(reversed(halves))
+            return
+
+        n_real = len(states)
+        self.stats.n_batches += 1
+        self.stats.n_rows += n_real
+        self.stats.n_pad_rows += len(rows) - n_real
+        self.stats.load_s += load_dt
+        self.stats.combine_s += dt
+        for sid, cnt in counts.items():
+            s = uniq[sid]
+            frac = cnt / n_real
+            s.stats.load_s += load_dt * frac
+            s.stats.combine_s += dt * frac
+        for i, (s, ci, _) in enumerate(rows):
+            if s is None:
+                continue
+            s.scores[ci] = scores[i]
+            s.n_done += 1
+            if s.n_done == s.n:
+                done.append(self._finalize(s))
+
+    def _finalize(self, state: _ReqState) -> RankResponse:
+        order = np.argsort(-state.scores)
+        ids = list(state.req.doc_ids)
+        return RankResponse(
+            request_id=state.rid,
+            doc_ids=[ids[i] for i in order],
+            scores=state.scores[order],
+            stats=state.stats,
+            latency_s=time.perf_counter() - state.t_submit)

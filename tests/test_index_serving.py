@@ -1,5 +1,6 @@
 """Index store + reranking server."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -145,6 +146,75 @@ def test_zero_doc_index_roundtrip(tmp_path):
     assert idx.storage_bytes() == 0
     reps, dvalid = idx.load_docs([], pad_to=16)
     assert reps.shape == (0, 16, 16) and dvalid.shape == (0, 16)
+
+
+def test_gather_matches_per_doc_loop(tmp_path):
+    """The vectorized gather() must reproduce the original per-doc copy
+    loop exactly, including pad_to clamping of over-long docs."""
+    cfg, params, docs, valid, lengths = _setup(tmp_path)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    for ids, pad_to in [(list(range(10)), 16), ([2, 5, 2, 9], 16),
+                        ([1, 4], 8), ([], 16), ([3], None)]:
+        reps, dvalid = idx.gather(ids, pad_to=pad_to)
+        pad = pad_to or idx.max_doc_len
+        ref = np.zeros((len(ids), pad, idx.rep_dim), idx.dtype)
+        ref_valid = np.zeros((len(ids), pad), bool)
+        for i, d in enumerate(ids):
+            off, n = idx._offsets[d]
+            n = min(n, pad)
+            ref[i, :n] = idx._mmap[off: off + n]
+            ref_valid[i, :n] = True
+        np.testing.assert_array_equal(reps, ref)
+        np.testing.assert_array_equal(dvalid, ref_valid)
+
+
+def test_gather_rejects_bad_ids_and_unopened_index(tmp_path):
+    cfg, params, docs, valid, lengths = _setup(tmp_path)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    with pytest.raises(IndexError):
+        idx.gather([0, 99])
+    building = TermRepIndex(str(tmp_path / "b"), rep_dim=16)
+    with pytest.raises(RuntimeError, match="not open for reading"):
+        building.gather([0])
+
+
+def test_add_docs_after_open_or_finalize_raises(tmp_path):
+    """Regression: add_docs() after open()/finalize() used to reopen
+    reps.bin with 'wb', silently truncating every stored representation."""
+    cfg, params, docs, valid, lengths = _setup(tmp_path)
+    reps, _ = TermRepIndex.open(str(tmp_path / "idx")).gather([0])
+
+    opened = TermRepIndex.open(str(tmp_path / "idx"))
+    with pytest.raises(RuntimeError, match="read-only"):
+        opened.add_docs(reps, [lengths[0]])
+
+    built = TermRepIndex(str(tmp_path / "fin"), rep_dim=16, dtype="float16",
+                         l=1, compressed=True, max_doc_len=16)
+    built.add_docs(reps, [lengths[0]])
+    built.finalize()
+    with pytest.raises(RuntimeError, match="read-only"):
+        built.add_docs(reps, [lengths[0]])
+    with pytest.raises(RuntimeError, match="already-finalized"):
+        built.finalize()
+    # the data on disk survived every rejected write
+    again = TermRepIndex.open(str(tmp_path / "fin"))
+    np.testing.assert_array_equal(again.gather([0])[0], reps)
+
+
+def test_reranker_validates_index_compat(tmp_path):
+    """An index built with a larger max_doc_len (or mismatched rep shape)
+    must be rejected at construction instead of silently truncating."""
+    import dataclasses
+
+    cfg, params, docs, valid, lengths = _setup(tmp_path)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    with pytest.raises(ValueError, match="truncate"):
+        Reranker(params, dataclasses.replace(cfg, max_doc_len=8), idx)
+    with pytest.raises(ValueError, match="rep_dim"):
+        Reranker(params, dataclasses.replace(cfg, compress_dim=32), idx)
+    with pytest.raises(ValueError, match="compress"):
+        Reranker(params, dataclasses.replace(cfg, compress_dim=0), idx)
+    Reranker(params, cfg, idx)               # compatible: constructs fine
 
 
 def test_empty_index_and_empty_rerank_together(tmp_path):
