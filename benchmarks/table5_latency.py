@@ -131,15 +131,19 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
                 n_queries: int = 16, candidates: int = 16,
                 micro_batch: int = 32, n_layers: int = 4, d_model: int = 64,
                 l: int = 2, max_q: int = 16, max_d: int = 48,
-                n_docs: int = 128) -> dict:
+                n_docs: int = 128, codec: str = "fp16",
+                n_shards: int = 2) -> dict:
     """QPS / p50 / p99 of the RankingService under ``concurrency`` queries
-    per scheduling wave (cross-query micro-batch packing + prefetch)."""
+    per scheduling wave (cross-query micro-batch packing + prefetch), served
+    from a multi-shard v2 index built through the offline pipeline
+    (``codec`` selects the storage encoding; int8 decodes on device)."""
     import tempfile
 
     import numpy as np
 
-    from repro.core.prettr import PreTTRConfig, init_prettr, precompute_docs
-    from repro.index import TermRepIndex
+    from repro.core.prettr import PreTTRConfig, init_prettr
+    from repro.data.synthetic_ir import pack_query
+    from repro.index import IndexBuilder, TermRepIndex
     from repro.serving import RankingService, RankRequest
 
     attn_impl, compress_impl = impls_for(backend)
@@ -152,43 +156,40 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
     cfg = PreTTRConfig(backbone=bb, l=l, max_query_len=max_q,
                        max_doc_len=max_d, compress_dim=e)
     params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
-    key = jax.random.PRNGKey(1)
-    docs = jax.random.randint(key, (n_docs, max_d), 5, 1000)
-    dvalid = jnp.ones((n_docs, max_d), bool)
-    reps = precompute_docs(params, cfg, docs, dvalid)
 
     rng = np.random.default_rng(0)
+    doc_lists = [rng.integers(5, 1000, size=max_d - 1) for _ in range(n_docs)]
     with tempfile.TemporaryDirectory() as tmp:
-        idx = TermRepIndex(tmp, rep_dim=e, dtype="float16", l=l,
-                           compressed=True, max_doc_len=max_d)
-        idx.add_docs(np.asarray(reps), [max_d] * n_docs)
-        idx.finalize()
+        builder = IndexBuilder(tmp, cfg, params, codec=codec,
+                               n_shards=n_shards, batch_size=64)
+        builder.build(doc_lists)
         idx = TermRepIndex.open(tmp)
 
         svc = RankingService(params, cfg, idx, micro_batch=micro_batch)
-        queries = [np.asarray(rng.integers(5, 1000, size=max_q), np.int32)
+        queries = [pack_query(rng.integers(5, 1000, size=max_q - 2), max_q)
                    for _ in range(n_queries)]
         cand_lists = [list(rng.integers(0, n_docs, size=candidates))
                       for _ in range(n_queries)]
-        qv = np.ones((max_q,), bool)
         # warm the jit caches (encode + packed join shape) off the clock
-        svc.rank(queries[0], qv, cand_lists[0], request_id="warmup")
+        svc.rank(*queries[0], cand_lists[0], request_id="warmup")
         svc.reset_stats()
 
         lat_s = []
         t0 = time.perf_counter()
         for lo in range(0, n_queries, concurrency):
             for qi in range(lo, min(lo + concurrency, n_queries)):
-                svc.submit(RankRequest(queries[qi], qv, cand_lists[qi],
+                q, qv = queries[qi]
+                svc.submit(RankRequest(q, qv, cand_lists[qi],
                                        request_id=str(qi)))
             lat_s += [r.latency_s for r in svc.drain()]
         wall = time.perf_counter() - t0
     p50, p99 = (float(v) for v in np.percentile(lat_s, [50, 99]))
-    row = {"backend": backend, "concurrency": concurrency, "qps":
-           n_queries / wall, "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3,
+    row = {"backend": backend, "concurrency": concurrency, "codec": codec,
+           "qps": n_queries / wall, "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3,
            "n_batches": svc.stats.n_batches,
            "pack_fill": svc.stats.pack_fill}
-    print(f"[table5] service {backend} concurrency={concurrency}: "
+    print(f"[table5] service {backend} codec={codec} "
+          f"concurrency={concurrency}: "
           f"QPS={row['qps']:.2f} p50={row['p50_ms']:.1f}ms "
           f"p99={row['p99_ms']:.1f}ms "
           f"(batches={row['n_batches']} pack_fill={row['pack_fill']:.2f})")
@@ -216,11 +217,16 @@ def main() -> None:
                     help="--service: candidates per query")
     ap.add_argument("--micro-batch", type=int, default=32,
                     help="--service: packed micro-batch rows")
+    ap.add_argument("--codec", default="fp16",
+                    help="--service: storage codec of the built index")
+    ap.add_argument("--index-shards", type=int, default=2,
+                    help="--service: shard count of the built index")
     args = ap.parse_args()
     if args.service:
         run_service(backend=args.backend, concurrency=args.concurrency,
                     n_queries=args.queries, candidates=args.candidates,
-                    micro_batch=args.micro_batch)
+                    micro_batch=args.micro_batch, codec=args.codec,
+                    n_shards=args.index_shards)
         return
     sizes = dict(n_layers=args.layers, d_model=args.d_model,
                  n_docs=args.docs, max_l=args.max_l)

@@ -13,9 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.prettr_bert import smoke_config
-from repro.core.prettr import init_prettr, precompute_docs, rank_pairs_loss
-from repro.data.synthetic_ir import SyntheticIRWorld, precision_at_k
-from repro.index import TermRepIndex
+from repro.core.prettr import init_prettr, rank_pairs_loss
+from repro.data.synthetic_ir import SyntheticIRWorld, pack_query, precision_at_k
+from repro.index import IndexBuilder, TermRepIndex
 from repro.optim import OptimizerConfig, adam_update, init_opt_state
 from repro.serving import Reranker
 
@@ -47,33 +47,20 @@ for step in range(30):
 print(f"trained 30 steps, final pairwise loss {float(loss):.4f}")
 
 # --- 2. index (paper Fig. 1 step 2) ----------------------------------------
-docs = np.zeros((world.n_docs, cfg.max_doc_len), np.int32)
-lengths = []
-for i, d in enumerate(world.docs):
-    packed = np.concatenate([d[: cfg.max_doc_len - 1], [2]])  # trailing [SEP]
-    docs[i, : len(packed)] = packed
-    lengths.append(len(packed))
-valid = np.arange(cfg.max_doc_len)[None] < np.asarray(lengths)[:, None]
-reps = precompute_docs(params, cfg, jnp.asarray(docs), jnp.asarray(valid))
-
-idx = TermRepIndex("results/quickstart_index", rep_dim=cfg.compress_dim,
-                   dtype="float16", l=cfg.l, compressed=True,
-                   max_doc_len=cfg.max_doc_len)
-idx.add_docs(np.asarray(reps), lengths)
-idx.finalize()
+builder = IndexBuilder("results/quickstart_index", cfg, params,
+                       codec="fp16", n_shards=2, batch_size=64)
+report = builder.build(list(world.docs))
 idx = TermRepIndex.open("results/quickstart_index")
-print(f"indexed {len(idx)} docs, {idx.storage_bytes()/2**20:.2f} MiB "
-      f"(e={cfg.compress_dim}, fp16)")
+print(f"indexed {len(idx)} docs in {report.n_shards} shards, "
+      f"{idx.storage_bytes()/2**20:.2f} MiB (e={cfg.compress_dim}, "
+      f"codec={report.codec})")
 
 # --- 3. serve (paper Fig. 1 step 3) ----------------------------------------
 rr = Reranker(params, cfg, idx, micro_batch=32)
 p20 = []
 for qi in range(world.n_queries):
     cands = list(world.candidates(qi, k=48))
-    q = np.zeros(cfg.max_query_len, np.int32)
-    packed = np.concatenate([[1], world.queries[qi], [2]])[: cfg.max_query_len]
-    q[: len(packed)] = packed
-    qv = np.arange(cfg.max_query_len) < len(packed)
+    q, qv = pack_query(world.queries[qi], cfg.max_query_len)
     ranked, scores, stats = rr.rerank(q, qv, cands)
     p20.append(precision_at_k(world.qrels[qi][np.asarray(ranked)], 20))
 print(f"re-ranked {world.n_queries} queries: mean P@20={np.mean(p20):.3f} "

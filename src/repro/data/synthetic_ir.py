@@ -19,6 +19,39 @@ import numpy as np
 from repro.data.tokenizer import CLS, PAD, SEP, N_SPECIAL
 
 
+# -- model-input packing (shared by serve / index-build / examples) ----------
+
+
+def pack_query(q_ids, max_query_len: int):
+    """``[CLS] q [SEP]`` padded to ``max_query_len`` ->
+    (tokens [Lq] int32, valid [Lq] bool)."""
+    q = np.full(max_query_len, PAD, np.int32)
+    packed = np.concatenate([[CLS], np.asarray(q_ids), [SEP]])[:max_query_len]
+    q[: len(packed)] = packed
+    valid = np.arange(max_query_len) < len(packed)
+    return q, valid
+
+
+def pack_doc(d_ids, max_doc_len: int):
+    """``d [SEP]`` (truncated, [SEP]-terminated) padded to ``max_doc_len``
+    -> (tokens [Ld] int32, n_tokens)."""
+    d = np.full(max_doc_len, PAD, np.int32)
+    packed = np.concatenate([np.asarray(d_ids)[: max_doc_len - 1], [SEP]])
+    d[: len(packed)] = packed
+    return d, len(packed)
+
+
+def pack_doc_batch(doc_token_lists, max_doc_len: int):
+    """Fixed-shape doc batch for ``precompute_docs`` ->
+    (tokens [N, Ld] int32, lengths [N] int64, valid [N, Ld] bool)."""
+    tokens = np.full((len(doc_token_lists), max_doc_len), PAD, np.int32)
+    lengths = np.zeros(len(doc_token_lists), np.int64)
+    for i, d in enumerate(doc_token_lists):
+        tokens[i], lengths[i] = pack_doc(d, max_doc_len)
+    valid = np.arange(max_doc_len)[None] < lengths[:, None]
+    return tokens, lengths, valid
+
+
 @dataclasses.dataclass
 class SyntheticIRWorld:
     vocab_size: int = 8192

@@ -1,0 +1,321 @@
+"""Offline sharded index builder — the paper's indexing phase (Fig. 1
+step 2: "we precompute part of the document term representations at
+indexing time"), production-shaped.
+
+:class:`IndexBuilder` drives :func:`repro.core.prettr.precompute_docs` over
+a corpus and writes a format-v2 index (``manifest.msgpack`` +
+``shard-NNNNN/`` stream files — see ``repro.index.store``):
+
+* **Fixed-shape batches** — documents are packed to ``[batch, max_doc_len]``
+  (last batch padded with empty rows, results dropped), so the whole build
+  hits one jit cache entry.
+* **Data-parallel over the ``repro.dist`` mesh** — given a mesh, each batch
+  is sharded over the ``data`` axis (weights replicated); every example's
+  computation is row-independent, so the sharded build is doc-for-doc
+  bit-identical to the single-host build.
+* **Overlapped host writes** — a writer thread materializes each batch on
+  the host, codec-encodes it, and appends to the shard files while the
+  device encodes the *next* batch (the PR-3 serving prefetch thread, in
+  reverse: there host reads overlap device compute, here host writes do).
+* **Per-shard writers** — documents map to ``n_shards`` contiguous ranges;
+  each shard directory gets one append-only file per codec stream plus its
+  row in the manifest, written once at finalize.
+
+:func:`verify_index` re-encodes a sample of documents and checks the stored
+streams byte-for-byte (codecs are deterministic, so this is exact for every
+codec, int8 included).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Sequence
+
+import msgpack
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prettr as P
+from repro.data.synthetic_ir import pack_doc_batch
+from repro.index.codecs import StorageCodec, get_codec
+from repro.index.store import FORMAT_VERSION, TermRepIndex
+
+_STOP = object()
+
+
+@dataclasses.dataclass
+class BuildReport:
+    """What one ``build()`` run did, for logs and the storage benchmark."""
+    n_docs: int
+    n_tokens: int
+    n_shards: int
+    codec: str
+    storage_bytes: int                 # actual bytes on disk (all streams)
+    encode_s: float                    # device encode wall (dispatch side)
+    write_s: float                     # host materialize + codec + file IO
+    wall_s: float
+
+    @property
+    def bytes_per_doc(self) -> float:
+        return self.storage_bytes / max(1, self.n_docs)
+
+
+def shard_ranges(n_docs: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous [lo, hi) doc ranges, balanced like ``np.array_split``."""
+    bounds = np.linspace(0, n_docs, n_shards + 1).astype(np.int64)
+    return [(int(bounds[i]), int(bounds[i + 1])) for i in range(n_shards)]
+
+
+class _ShardWriter:
+    """Append-only writer for one shard directory: one open file per codec
+    stream, plus the per-doc token counts the manifest needs."""
+
+    def __init__(self, root: str, shard_id: int, codec: StorageCodec,
+                 rep_dim: int):
+        self.dir_name = f"shard-{shard_id:05d}"
+        self.path = os.path.join(root, self.dir_name)
+        os.makedirs(self.path, exist_ok=True)
+        self._handles = {
+            name: open(os.path.join(self.path, f"{name}.bin"), "wb")
+            for name in codec.streams(rep_dim)}
+        self.lengths: list[int] = []
+
+    def append(self, parts: dict[str, np.ndarray], n_tokens: int):
+        for name, h in self._handles.items():
+            h.write(np.ascontiguousarray(parts[name]).tobytes())
+        self.lengths.append(int(n_tokens))
+
+    def close(self):
+        for h in self._handles.values():
+            h.flush()
+            os.fsync(h.fileno())
+            h.close()
+
+    def manifest_row(self) -> dict:
+        return {"dir": self.dir_name, "n_docs": len(self.lengths),
+                "lengths": self.lengths}
+
+
+class IndexBuilder:
+    """Build a sharded, codec-encoded term-rep index from raw documents.
+
+    Usage::
+
+        builder = IndexBuilder(out_dir, cfg, params, codec="int8",
+                               n_shards=8, batch_size=64, mesh=mesh)
+        report = builder.build(doc_token_lists)
+        index = TermRepIndex.open(out_dir)
+
+    ``mesh`` (optional): a jax Mesh with a ``"data"`` axis; batches are
+    sharded over it for data-parallel encoding.  ``writer_depth`` bounds
+    the in-flight device batches the writer thread may lag behind
+    (``0`` = synchronous writes, for debugging).  ``backend`` reroutes the
+    encode through a compute-backend family exactly as on the serving
+    classes.
+    """
+
+    def __init__(self, out_dir: str, cfg: P.PreTTRConfig, params, *,
+                 codec: str | StorageCodec = "fp16", n_shards: int = 1,
+                 batch_size: int = 64, mesh=None, writer_depth: int = 2,
+                 backend: str | None = None):
+        if backend is not None:
+            from repro.models.backend import apply_backend
+            cfg = apply_backend(cfg, backend)
+        self.codec = get_codec(codec) if isinstance(codec, str) else codec
+        # quantizing codecs encode from full precision; float codecs store
+        # the model's own store_dtype bytes unchanged (fp16 stays bit-exact
+        # with the in-memory rank_forward round-trip)
+        store_dtype = jnp.dtype(np.dtype(self.codec.encode_dtype))
+        self.cfg = dataclasses.replace(cfg, store_dtype=store_dtype) \
+            if store_dtype != jnp.dtype(cfg.store_dtype) else cfg
+        self.out_dir = out_dir
+        self.params = params
+        self.n_shards = max(1, int(n_shards))
+        self.mesh = mesh
+        self.writer_depth = max(0, writer_depth)
+        self.rep_dim = cfg.compress_dim or cfg.backbone.d_model
+        ndev = mesh.size if mesh is not None else 1
+        # fixed jit shape, divisible by the data-parallel mesh
+        self.batch_size = -(-max(1, batch_size) // ndev) * ndev
+        self._params_replicated = None
+        self._encode = jax.jit(
+            lambda p, d, v: P.precompute_docs(p, self.cfg, d, v))
+
+    # -- device side -----------------------------------------------------------
+    def _device_batch(self, tokens: np.ndarray, valid: np.ndarray):
+        """Pad to the fixed batch shape, place on the mesh, encode."""
+        n = len(tokens)
+        if n < self.batch_size:
+            pad = self.batch_size - n
+            tokens = np.concatenate(
+                [tokens, np.zeros((pad, tokens.shape[1]), tokens.dtype)])
+            valid = np.concatenate(
+                [valid, np.zeros((pad, valid.shape[1]), bool)])
+        params = self.params
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as PS
+            data = NamedSharding(self.mesh, PS("data", None))
+            tokens = jax.device_put(tokens, data)
+            valid = jax.device_put(valid, data)
+            if self._params_replicated is None:
+                self._params_replicated = jax.device_put(
+                    params, NamedSharding(self.mesh, PS()))
+            params = self._params_replicated
+        return self._encode(params, jnp.asarray(tokens), jnp.asarray(valid))
+
+    # -- host side (writer thread) ---------------------------------------------
+    def _write_loop(self, work_q: queue.Queue, writers: list[_ShardWriter],
+                    boundaries: np.ndarray, err: list, write_s: list):
+        while True:
+            item = work_q.get()
+            if item is _STOP:
+                return
+            try:
+                self._write_batch(*item, writers, boundaries, write_s)
+            except Exception as e:                    # noqa: BLE001
+                err.append(e)
+                return
+
+    # -- the pipeline ----------------------------------------------------------
+    def build(self, docs: Sequence[np.ndarray]) -> BuildReport:
+        """Encode ``docs`` (raw token arrays; packed to ``[SEP]``-terminated
+        fixed shapes here) and write the sharded v2 index."""
+        t_wall = time.perf_counter()
+        n_docs = len(docs)
+        ranges = shard_ranges(n_docs, self.n_shards)
+        boundaries = np.asarray([lo for lo, _ in ranges], np.int64)
+        writers = [_ShardWriter(self.out_dir, s, self.codec, self.rep_dim)
+                   for s in range(self.n_shards)]
+        err: list = []
+        write_s = [0.0]
+        work_q: queue.Queue = queue.Queue(maxsize=max(1, self.writer_depth))
+        worker = None
+        if self.writer_depth > 0:
+            worker = threading.Thread(
+                target=self._write_loop,
+                args=(work_q, writers, boundaries, err, write_s), daemon=True)
+            worker.start()
+
+        encode_s = 0.0
+        try:
+            for lo in range(0, n_docs, self.batch_size):
+                chunk = docs[lo: lo + self.batch_size]
+                tokens, lengths, valid = pack_doc_batch(
+                    chunk, self.cfg.max_doc_len)
+                t0 = time.perf_counter()
+                reps_dev = self._device_batch(tokens, valid)
+                encode_s += time.perf_counter() - t0
+                if worker is not None:
+                    # bounded put that never deadlocks on a dead writer
+                    while not err:
+                        try:
+                            work_q.put((reps_dev, lengths, lo), timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+                    if err:
+                        break
+                else:                       # synchronous debug path
+                    self._write_batch(reps_dev, lengths, lo, writers,
+                                      boundaries, write_s)
+        finally:
+            if worker is not None:
+                while worker.is_alive():
+                    try:
+                        work_q.put(_STOP, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                worker.join()
+            for w in writers:
+                w.close()
+        if err:
+            raise err[0]
+
+        manifest = {"version": FORMAT_VERSION, "codec": self.codec.name,
+                    "rep_dim": self.rep_dim, "l": self.cfg.l,
+                    "compressed": bool(self.cfg.compress_dim),
+                    "max_doc_len": self.cfg.max_doc_len, "n_docs": n_docs,
+                    # XLA output differs at the ulp across *batch shapes*
+                    # (not row positions), so byte-exact re-verification
+                    # must replay the build's fixed shape
+                    "encode_batch": self.batch_size,
+                    "shards": [w.manifest_row() for w in writers]}
+        with open(os.path.join(self.out_dir, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+
+        n_tokens = sum(sum(w.lengths) for w in writers)
+        on_disk = sum(
+            os.path.getsize(os.path.join(w.path, f"{name}.bin"))
+            for w in writers for name in self.codec.streams(self.rep_dim))
+        return BuildReport(
+            n_docs=n_docs, n_tokens=n_tokens, n_shards=self.n_shards,
+            codec=self.codec.name, storage_bytes=on_disk,
+            encode_s=encode_s, write_s=write_s[0],
+            wall_s=time.perf_counter() - t_wall)
+
+    def _write_batch(self, reps_dev, lengths, doc_lo, writers, boundaries,
+                     write_s):
+        """Materialize one device batch and append it to its shards.  The
+        ``np.asarray`` blocks on the device — in the threaded path
+        everything after it overlaps the device encoding the next batch."""
+        t0 = time.perf_counter()
+        reps = np.asarray(reps_dev)
+        for i, n in enumerate(lengths):
+            shard = int(np.searchsorted(boundaries, doc_lo + i,
+                                        side="right") - 1)
+            writers[shard].append(self.codec.encode(reps[i, : int(n)]),
+                                  int(n))
+        write_s[0] += time.perf_counter() - t0
+
+
+def verify_index(index: TermRepIndex, cfg: P.PreTTRConfig, params,
+                 docs: Sequence[np.ndarray], sample: int = 16,
+                 seed: int = 0) -> int:
+    """Re-encode a sample of ``docs`` and compare the stored streams
+    byte-for-byte against a fresh ``precompute_docs`` pass (deterministic
+    codecs make this exact for fp16 *and* int8).  The sample is encoded in
+    the same fixed batch shape the build used (``manifest.encode_batch``) —
+    per-row results are position-invariant but XLA output differs at the
+    ulp across batch *shapes*.  Returns the number of docs checked; raises
+    AssertionError on any mismatch."""
+    rng = np.random.default_rng(seed)
+    n = len(index)
+    ids = np.sort(rng.choice(n, size=min(sample, n), replace=False)) \
+        if n else np.zeros((0,), np.int64)
+    if not len(ids):
+        return 0
+    codec = index.codec
+    store_dtype = jnp.dtype(np.dtype(codec.encode_dtype))
+    vcfg = dataclasses.replace(cfg, store_dtype=store_dtype)
+    batch = int(getattr(index, "encode_batch", 0) or len(ids))
+    encode = jax.jit(lambda p, d, v: P.precompute_docs(p, vcfg, d, v))
+    parts, got_valid = index.gather_raw([int(i) for i in ids],
+                                        pad_to=cfg.max_doc_len)
+    for lo in range(0, len(ids), batch):
+        chunk = ids[lo: lo + batch]
+        tokens, lengths, valid = pack_doc_batch([docs[i] for i in chunk],
+                                                cfg.max_doc_len)
+        if len(chunk) < batch:           # replay the build's fixed shape
+            pad = batch - len(chunk)
+            tokens = np.concatenate(
+                [tokens, np.zeros((pad, tokens.shape[1]), tokens.dtype)])
+            valid = np.concatenate(
+                [valid, np.zeros((pad, valid.shape[1]), bool)])
+        reps = np.asarray(encode(params, jnp.asarray(tokens),
+                                 jnp.asarray(valid)))
+        for i, (n_tok, rep) in enumerate(zip(lengths, reps)):
+            row = lo + i
+            want = codec.encode(rep[: int(n_tok)])
+            for name, arr in want.items():
+                np.testing.assert_array_equal(
+                    parts[name][row, : int(n_tok)], arr,
+                    err_msg=f"doc {ids[row]} stream {name!r} mismatch")
+            assert int(got_valid[row].sum()) == int(n_tok), \
+                f"doc {ids[row]} stored length mismatch"
+    return len(ids)

@@ -1,0 +1,143 @@
+"""Pluggable storage codecs for term-representation indexes (paper §6.2).
+
+The paper's storage win comes from *how* the precomputed term
+representations are laid out on disk: raw fp32 vectors (112TB for
+ClueWeb09-B) vs fp16 ("using half-precision floating point values ...
+reduces the storage required by 50%") vs a quantized 8-bit encoding in the
+spirit of SDR's succinct document representations (Cohen et al., 2021).
+This module is the registry that makes the choice pluggable — mirroring
+``repro.models.backend``: one string knob (``codec="fp16"``) selects an
+implementation, and the index, the builder, serving, and the storage
+accounting all dispatch through it.
+
+A codec describes one or more per-token *streams* (named flat files inside
+a shard directory, one row per stored token) and the transforms between the
+model's float representations and those streams:
+
+* ``streams(rep_dim)`` — ``{name: (np.dtype, row_shape)}``; ``"reps"`` is
+  mandatory, extra streams carry side-channel data (``int8`` stores a
+  per-token fp32 scale in ``"scales"``).
+* ``encode(x)`` — ``[T, e]`` float array -> ``{name: [T, ...] array}``.
+  Runs host-side in the builder's writer thread.
+* ``decode(parts)`` — the inverse, shape-polymorphic and jnp-traceable:
+  serving gathers the raw streams from the memmap, ``jax.device_put``\\ s
+  them, and decodes *on device* inside the jitted scoring step, so the
+  narrow encoded payload (not the widened floats) crosses the host->device
+  link.  Codecs with ``decode_is_identity`` (fp16/fp32) skip the decode
+  step entirely — stored bytes flow straight into the join, which is what
+  keeps the fp16 path bit-exact.
+* ``bytes_per_token(rep_dim)`` — storage accounting (§6.2), summed over
+  streams.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_CODECS: dict[str, type["StorageCodec"]] = {}
+
+
+def register_codec(cls: type["StorageCodec"]) -> type["StorageCodec"]:
+    """Class decorator: register under ``cls.name`` (re-registering a name
+    overwrites, same contract as ``models.backend.register``)."""
+    _CODECS[cls.name] = cls
+    return cls
+
+
+def available_codecs() -> list[str]:
+    return sorted(_CODECS)
+
+
+def get_codec(name: str) -> "StorageCodec":
+    cls = _CODECS.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown storage codec {name!r}; available: {available_codecs()}")
+    return cls()
+
+
+def codec_for_v1_dtype(dtype) -> "StorageCodec":
+    """Map a legacy v1 ``meta.msgpack`` dtype to its codec (v1 stored raw
+    float blocks, so only the float codecs have a v1 spelling)."""
+    dt = np.dtype(dtype)
+    if dt == np.float16:
+        return get_codec("fp16")
+    if dt == np.float32:
+        return get_codec("fp32")
+    raise ValueError(
+        f"v1 indexes store raw float16/float32 blocks; dtype {dt.str!r} has "
+        f"no v1 codec (build a v2 index with repro.launch.build_index)")
+
+
+class StorageCodec:
+    """Base class: a raw-float passthrough parameterized by ``_dtype``."""
+
+    name: str = ""
+    _dtype = np.float32
+    #: decode() returns parts["reps"] unchanged — serving may skip it and
+    #: feed the stored bytes straight to the join (bit-exact path).
+    decode_is_identity = True
+
+    #: dtype the builder should materialize model outputs in before
+    #: encode() — quantizing codecs want full-precision inputs.
+    @property
+    def encode_dtype(self):
+        return self._dtype
+
+    def streams(self, rep_dim: int) -> dict[str, tuple[np.dtype, tuple]]:
+        return {"reps": (np.dtype(self._dtype), (rep_dim,))}
+
+    def bytes_per_token(self, rep_dim: int) -> int:
+        total = 0
+        for dt, shape in self.streams(rep_dim).values():
+            total += dt.itemsize * int(np.prod(shape, dtype=np.int64))
+        return total
+
+    def encode(self, x: np.ndarray) -> dict[str, np.ndarray]:
+        return {"reps": np.asarray(x, self._dtype)}
+
+    def decode(self, parts):
+        return parts["reps"]
+
+
+@register_codec
+class Fp32Codec(StorageCodec):
+    name = "fp32"
+    _dtype = np.float32
+
+
+@register_codec
+class Fp16Codec(StorageCodec):
+    """The paper's 16-bit trick (§6.2): halve storage, bit-exact serving
+    (the model's ``store_dtype`` is already fp16, so encode is a no-op)."""
+    name = "fp16"
+    _dtype = np.float16
+
+
+@register_codec
+class Int8Codec(StorageCodec):
+    """Symmetric per-token int8 quantization: each stored token keeps an
+    fp32 scale = max(|x|)/127 over its ``e`` dims (the same scheme as the
+    gradient-compression DCN hop in ``repro.optim.compression``).  Decode
+    (``q * scale``) happens on device after ``gather()`` — the index ships
+    1 byte/dim + 4 bytes/token over PCIe instead of widened floats."""
+    name = "int8"
+    _dtype = np.int8
+    decode_is_identity = False
+
+    @property
+    def encode_dtype(self):
+        return np.float32                 # quantize from full precision
+
+    def streams(self, rep_dim: int) -> dict[str, tuple[np.dtype, tuple]]:
+        return {"reps": (np.dtype(np.int8), (rep_dim,)),
+                "scales": (np.dtype(np.float32), ())}
+
+    def encode(self, x: np.ndarray) -> dict[str, np.ndarray]:
+        x = np.asarray(x, np.float32)
+        scales = np.maximum(np.max(np.abs(x), axis=-1), 1e-12) / 127.0
+        q = np.clip(np.rint(x / scales[..., None]), -127, 127).astype(np.int8)
+        return {"reps": q, "scales": scales.astype(np.float32)}
+
+    def decode(self, parts):
+        # works on numpy and on jnp tracers: astype + broadcast only
+        return parts["reps"].astype(np.float32) * parts["scales"][..., None]

@@ -1,11 +1,27 @@
 """PreTTR term-representation index (paper: "the inverted index stores a
 precomputed term representation of documents").
 
-Disk layout: ``<dir>/reps.bin`` — contiguous fp16/int8 blocks, one per doc —
-plus ``meta.msgpack`` with per-doc (offset, n_tokens) and the global
-(rep_dim, dtype, l, compressed).  Reads are ``np.memmap``-backed so serving
-touches only the candidates' bytes (the paper's "load term representations"
-step).  Storage accounting mirrors §6.2.
+Two on-disk formats, one reader:
+
+* **v2 (current)** — ``<dir>/manifest.msgpack`` + ``<dir>/shard-NNNNN/``
+  directories, each holding one flat file per codec *stream* (``reps.bin``,
+  plus e.g. ``scales.bin`` for the int8 codec).  Written by
+  :class:`repro.index.builder.IndexBuilder`; codec-aware (fp32 / fp16 /
+  int8 — see ``repro.index.codecs``) and sharded so the offline build can
+  run data-parallel with one writer per shard.
+* **v1 (legacy)** — ``<dir>/meta.msgpack`` + a single ``<dir>/reps.bin`` of
+  contiguous raw fp16/fp32 blocks, one per doc.  Still written by the
+  inline ``add_docs()``/``finalize()`` API and read transparently (a v1
+  index opens as a single-shard index with the matching float codec).
+
+Reads are ``np.memmap``-backed so serving touches only the candidates'
+bytes (the paper's "load term representations" step): :meth:`gather`
+returns decoded float batches for the classic API, :meth:`gather_raw`
+returns the codec's raw streams so serving can ship the narrow payload to
+the device and decode there.  Malformed indexes (missing / corrupt /
+version-mismatched metadata) raise :class:`IndexFormatError` naming the
+path.  Storage accounting mirrors §6.2 through the codec's
+``bytes_per_token``.
 """
 from __future__ import annotations
 
@@ -15,30 +31,84 @@ from typing import Sequence
 import msgpack
 import numpy as np
 
+from repro.index.codecs import codec_for_v1_dtype, get_codec
+
+FORMAT_VERSION = 2
+
+
+class IndexFormatError(Exception):
+    """The on-disk index is missing, unreadable, or a format this reader
+    does not understand."""
+
+
+def _read_msgpack(path: str, kind: str) -> dict:
+    if not os.path.exists(path):
+        raise IndexFormatError(
+            f"no {kind} at {path!r}: not a term-rep index directory "
+            f"(expected format v{FORMAT_VERSION} manifest.msgpack or legacy "
+            f"v1 meta.msgpack)")
+    try:
+        with open(path, "rb") as f:
+            obj = msgpack.unpackb(f.read())
+    except Exception as e:
+        raise IndexFormatError(
+            f"corrupt {kind} at {path!r}: {type(e).__name__}: {e}") from e
+    if not isinstance(obj, dict):
+        raise IndexFormatError(
+            f"corrupt {kind} at {path!r}: expected a map, got "
+            f"{type(obj).__name__}")
+    return obj
+
+
+def _open_stream(path: str, dtype: np.dtype, row_shape: tuple, n_rows: int):
+    if n_rows == 0:                       # np.memmap rejects empty files
+        return np.zeros((0, *row_shape), dtype)
+    try:
+        return np.memmap(path, dtype=dtype, mode="r",
+                         shape=(n_rows, *row_shape))
+    except (OSError, ValueError) as e:    # short/truncated/unreadable file
+        raise IndexFormatError(
+            f"corrupt index stream {path!r}: expected {n_rows} rows of "
+            f"{dtype.str} x {row_shape} "
+            f"({n_rows * dtype.itemsize * int(np.prod(row_shape, dtype=np.int64))} "
+            f"bytes): {e}") from e
+
 
 class TermRepIndex:
     def __init__(self, path: str, rep_dim: int, dtype: str = "float16",
-                 l: int = 0, compressed: bool = False, max_doc_len: int = 0):
+                 l: int = 0, compressed: bool = False, max_doc_len: int = 0,
+                 codec=None):
         self.path = path
         self.rep_dim = rep_dim
         self.dtype = np.dtype(dtype)
+        self.codec = get_codec(codec) if isinstance(codec, str) else (
+            codec or codec_for_v1_dtype(self.dtype))
         self.l = l
         self.compressed = compressed
         self.max_doc_len = max_doc_len
-        self._offsets: list[tuple[int, int]] = []   # (token offset, n_tokens)
-        self._offsets_np = None                      # cached [N, 2] view
+        self.version = 1                             # v2 set by open()
+        self.encode_batch = 0                        # v2 build batch shape
+        self._offsets: list[tuple[int, int]] = []    # v1 build: (offset, n)
         self._write_handle = None
-        self._mmap = None
         self._n_tokens = 0
         self._readonly = False
+        # reader state (populated by open()):
+        self._doc_table: np.ndarray | None = None    # [N, 3] (shard, start, n)
+        self._shard_streams: list[dict[str, np.ndarray]] = []
+        self._mmap = None                            # v1 alias: reps memmap
 
-    # -- build (index time) --------------------------------------------------
+    # -- build (index time, legacy v1 single-file writer) ---------------------
     def _open_write(self):
         if self._readonly:
             # a 'wb' reopen would truncate reps.bin and corrupt the index
             raise RuntimeError(
                 "TermRepIndex is read-only: add_docs() after finalize() or "
                 "open() would truncate reps.bin; build a new index instead")
+        if self.dtype not in (np.dtype(np.float16), np.dtype(np.float32)):
+            raise ValueError(
+                f"the legacy v1 writer stores raw float blocks, not "
+                f"{self.dtype.str!r}; use repro.index.builder.IndexBuilder "
+                f"for codec-encoded (e.g. int8) indexes")
         os.makedirs(self.path, exist_ok=True)
         if self._write_handle is None:
             self._write_handle = open(os.path.join(self.path, "reps.bin"), "wb")
@@ -46,7 +116,6 @@ class TermRepIndex:
     def add_docs(self, reps: np.ndarray, lengths: Sequence[int]):
         """reps: [N, Ld, e] (padded); lengths: true token counts."""
         self._open_write()
-        self._offsets_np = None
         reps = np.asarray(reps, self.dtype)
         for i, n in enumerate(lengths):
             block = np.ascontiguousarray(reps[i, :n])
@@ -76,57 +145,159 @@ class TermRepIndex:
     # -- serve (query time) ----------------------------------------------------
     @classmethod
     def open(cls, path: str) -> "TermRepIndex":
-        with open(os.path.join(path, "meta.msgpack"), "rb") as f:
-            meta = msgpack.unpackb(f.read())
-        idx = cls(path, meta["rep_dim"], meta["dtype"], meta["l"],
-                  meta["compressed"], meta["max_doc_len"])
-        idx._offsets = [tuple(o) for o in meta["offsets"]]
-        idx._n_tokens = sum(n for _, n in idx._offsets)
-        idx._readonly = True
-        if idx._n_tokens:
-            idx._mmap = np.memmap(os.path.join(path, "reps.bin"),
-                                  dtype=idx.dtype, mode="r",
-                                  shape=(idx._n_tokens, idx.rep_dim))
-        else:                         # np.memmap rejects empty files
-            idx._mmap = np.zeros((0, idx.rep_dim), idx.dtype)
+        """Open a v2 (manifest + shards) or legacy v1 (single-file) index
+        for reading.  Raises :class:`IndexFormatError` when ``path`` is not
+        a readable index of a known version."""
+        manifest_p = os.path.join(path, "manifest.msgpack")
+        if os.path.exists(manifest_p):
+            return cls._open_v2(path, manifest_p)
+        return cls._open_v1(path, os.path.join(path, "meta.msgpack"))
+
+    @classmethod
+    def _open_v1(cls, path: str, meta_p: str) -> "TermRepIndex":
+        meta = _read_msgpack(meta_p, "v1 meta.msgpack")
+        try:
+            idx = cls(path, meta["rep_dim"], meta["dtype"], meta["l"],
+                      meta["compressed"], meta["max_doc_len"])
+            offsets = [(int(off), int(n)) for off, n in meta["offsets"]]
+            table = np.zeros((len(offsets), 3), np.int64)
+            if offsets:
+                table[:, 1:] = np.asarray(offsets, np.int64)
+        except (KeyError, ValueError, TypeError) as e:
+            raise IndexFormatError(
+                f"malformed v1 meta.msgpack at {meta_p!r}: {e!r}") from e
+        idx._offsets = offsets
+        idx._n_tokens = sum(n for _, n in offsets)
+        idx._finish_open([{
+            "reps": _open_stream(os.path.join(path, "reps.bin"), idx.dtype,
+                                 (idx.rep_dim,), idx._n_tokens)}], table)
+        idx._mmap = idx._shard_streams[0]["reps"]
         return idx
 
+    @classmethod
+    def _open_v2(cls, path: str, manifest_p: str) -> "TermRepIndex":
+        mani = _read_msgpack(manifest_p, "v2 manifest.msgpack")
+        version = mani.get("version")
+        if version != FORMAT_VERSION:
+            raise IndexFormatError(
+                f"index at {path!r} has format version {version!r}; this "
+                f"reader expects version {FORMAT_VERSION}")
+        try:
+            codec = get_codec(mani["codec"])
+            idx = cls(path, mani["rep_dim"],
+                      codec.streams(mani["rep_dim"])["reps"][0].str,
+                      mani["l"], mani["compressed"], mani["max_doc_len"],
+                      codec=codec)
+            shards = mani["shards"]
+        except (KeyError, ValueError, TypeError) as e:
+            raise IndexFormatError(
+                f"malformed v2 manifest at {manifest_p!r}: {e!r}") from e
+        idx.version = 2
+        idx.encode_batch = int(mani.get("encode_batch", 0))
+        streams_spec = codec.streams(idx.rep_dim)
+        shard_streams, rows = [], []
+        for si, sh in enumerate(shards):
+            try:
+                lengths = np.asarray(sh["lengths"], np.int64).reshape(-1)
+                sdir = os.path.join(path, sh["dir"])
+            except (KeyError, ValueError, TypeError) as e:
+                raise IndexFormatError(
+                    f"malformed v2 manifest at {manifest_p!r}: shard {si}: "
+                    f"{e!r}") from e
+            n_tok = int(lengths.sum())
+            opened = {}
+            for name, (dt, row_shape) in streams_spec.items():
+                fp = os.path.join(sdir, f"{name}.bin")
+                if n_tok and not os.path.exists(fp):
+                    raise IndexFormatError(
+                        f"index at {path!r}: shard stream {fp!r} is missing "
+                        f"(manifest lists {n_tok} tokens for this shard)")
+                opened[name] = _open_stream(fp, dt, row_shape, n_tok)
+            shard_streams.append(opened)
+            starts = np.concatenate([[0], np.cumsum(lengths)[:-1]]) \
+                if len(lengths) else np.zeros((0,), np.int64)
+            tbl = np.stack([np.full(len(lengths), si, np.int64),
+                            starts.astype(np.int64), lengths], axis=1)
+            rows.append(tbl)
+            idx._n_tokens += n_tok
+        table = (np.concatenate(rows, axis=0) if rows
+                 else np.zeros((0, 3), np.int64))
+        if len(table) != mani.get("n_docs", len(table)):
+            raise IndexFormatError(
+                f"index at {path!r}: manifest n_docs={mani.get('n_docs')} "
+                f"but shards list {len(table)} documents")
+        idx._finish_open(shard_streams, table)
+        return idx
+
+    def _finish_open(self, shard_streams, doc_table: np.ndarray):
+        self._shard_streams = shard_streams
+        self._doc_table = doc_table
+        self._readonly = True
+
+    @property
+    def doc_lengths(self) -> np.ndarray:
+        """Per-doc stored token counts ([N] int64; empty before open())."""
+        if self._doc_table is not None:
+            return self._doc_table[:, 2]
+        return np.asarray([n for _, n in self._offsets], np.int64)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._shard_streams)
+
     def __len__(self):
+        if self._doc_table is not None:
+            return len(self._doc_table)
         return len(self._offsets)
 
-    def gather(self, doc_ids: Sequence[int], pad_to: int | None = None):
-        """Batched vectorized read: one fancy-index gather over the memmap
-        (no per-doc Python loop) -> (reps [N, Ld, e], valid [N, Ld]).
+    def gather_raw(self, doc_ids: Sequence[int], pad_to: int | None = None):
+        """Batched vectorized read of the codec's raw streams: one
+        fancy-index gather per (shard, stream) over the memmaps ->
+        (``{stream: [N, Ld, ...]}``, valid ``[N, Ld]``).
 
-        This is the hot host-side path of serving — both the
-        ``RankingService`` prefetcher (which stages batches while the
-        device computes) and ``Reranker``/``load_docs`` go through it."""
-        if self._mmap is None:
+        This is the hot host-side path of serving — the
+        ``RankingService`` prefetcher stages these arrays (narrow encoded
+        payload, not widened floats) while the device computes, and the
+        codec decodes after the H2D copy."""
+        if self._doc_table is None:
             raise RuntimeError(
                 "index is not open for reading: finalize() and open() it")
         ids = np.asarray(list(doc_ids), np.int64).reshape(-1)
-        if self._offsets_np is None:
-            self._offsets_np = (np.asarray(self._offsets, np.int64)
-                                if self._offsets
-                                else np.zeros((0, 2), np.int64))
-        if ids.size and (ids.min() < 0 or ids.max() >= len(self._offsets)):
+        if ids.size and (ids.min() < 0 or ids.max() >= len(self)):
             raise IndexError(
-                f"doc id out of range [0, {len(self._offsets)}) in gather()")
+                f"doc id out of range [0, {len(self)}) in gather()")
         pad_to = pad_to or self.max_doc_len or int(max(
-            (self._offsets[d][1] for d in ids), default=1))
-        out = np.zeros((ids.size, pad_to, self.rep_dim), self.dtype)
+            (int(self._doc_table[d, 2]) for d in ids), default=1))
+        spec = self.codec.streams(self.rep_dim)
+        parts = {name: np.zeros((ids.size, pad_to, *row_shape), dt)
+                 for name, (dt, row_shape) in spec.items()}
         valid = np.zeros((ids.size, pad_to), bool)
         if ids.size == 0:
-            return out, valid
-        starts = self._offsets_np[ids, 0]
-        lens = np.minimum(self._offsets_np[ids, 1], pad_to)
-        total = int(lens.sum())
-        if total:
-            rows = np.repeat(np.arange(ids.size), lens)
-            cols = np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
-            out[rows, cols] = self._mmap[np.repeat(starts, lens) + cols]
+            return parts, valid
+        shard_of = self._doc_table[ids, 0]
+        starts = self._doc_table[ids, 1]
+        lens = np.minimum(self._doc_table[ids, 2], pad_to)
+        for si in np.unique(shard_of):
+            rsel = np.flatnonzero(shard_of == si)
+            rl = lens[rsel]
+            total = int(rl.sum())
+            if total == 0:
+                continue
+            rows = np.repeat(rsel, rl)
+            cols = np.arange(total) - np.repeat(np.cumsum(rl) - rl, rl)
+            src = np.repeat(starts[rsel], rl) + cols
+            for name in parts:
+                parts[name][rows, cols] = self._shard_streams[si][name][src]
             valid[rows, cols] = True
-        return out, valid
+        return parts, valid
+
+    def gather(self, doc_ids: Sequence[int], pad_to: int | None = None):
+        """Decoded float batch: -> (reps [N, Ld, e], valid [N, Ld]).  For
+        identity codecs (fp16/fp32) the stored bytes are returned as-is —
+        the bit-exact path; int8 decodes host-side here (serving prefers
+        :meth:`gather_raw` + on-device decode)."""
+        parts, valid = self.gather_raw(doc_ids, pad_to=pad_to)
+        return self.codec.decode(parts), valid
 
     def load_docs(self, doc_ids: Sequence[int], pad_to: int | None = None):
         """-> (reps [N, Ld, e], valid [N, Ld]) padded batch for
@@ -136,7 +307,7 @@ class TermRepIndex:
 
     # -- accounting (paper §6.2) -----------------------------------------------
     def storage_bytes(self) -> int:
-        return self._n_tokens * self.rep_dim * self.dtype.itemsize
+        return self._n_tokens * self.codec.bytes_per_token(self.rep_dim)
 
     @staticmethod
     def projected_storage_bytes(n_docs: int, avg_tokens: float, rep_dim: int,

@@ -1,15 +1,22 @@
-"""Serving driver: build a PreTTR index and serve re-ranking queries.
+"""Serving driver: build (or load) a PreTTR index and serve re-ranking
+queries.
 
 Phases (paper Fig. 1):
-  1. index: precompute doc term reps through layers 0..l, compress, store.
+  1. index: the offline pipeline (``repro.index.IndexBuilder``) —
+     precompute doc term reps through layers 0..l, codec-encode
+     (``--codec fp16|fp32|int8``), write ``--shards`` v2 shard directories
+     with host writes overlapped against device encoding.  ``--load-index``
+     skips the build and serves an existing index (built with
+     ``repro.launch.build_index``) instead.
   2. serve: per query — encode once, load candidates, join, rank; report
      per-phase latency (Table 5's Query / Decompress / Combine split).
 
 ``--service`` switches phase 2 from the sequential per-query ``Reranker``
 loop to the ``RankingService`` request/response API: ``--concurrency N``
-queries are admitted at a time, their candidates are packed into shared
-micro-batches while the prefetcher overlaps index reads with device
-compute, and throughput is reported as QPS with p50/p99 request latency.
+queries are admitted at a time, their candidates are packed into fixed
+cross-query micro-batches while the prefetcher overlaps index reads with
+device compute, and throughput is reported as QPS with p50/p99 request
+latency.
 """
 from __future__ import annotations
 
@@ -19,14 +26,14 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 
 def main() -> None:
     from repro.configs.prettr_bert import smoke_config
-    from repro.core.prettr import init_prettr, precompute_docs
-    from repro.data.synthetic_ir import SyntheticIRWorld, precision_at_k
-    from repro.index import TermRepIndex
+    from repro.core.prettr import init_prettr
+    from repro.data.synthetic_ir import (SyntheticIRWorld, pack_query,
+                                         precision_at_k)
+    from repro.index import IndexBuilder, TermRepIndex, available_codecs
     from repro.serving import Reranker, RankingService, RankRequest
 
     ap = argparse.ArgumentParser()
@@ -38,6 +45,15 @@ def main() -> None:
     ap.add_argument("--micro-batch", type=int, default=32)
     ap.add_argument("--index-dir", default="results/prettr_index")
     ap.add_argument("--index-batch", type=int, default=64)
+    ap.add_argument("--codec", default="fp16", choices=available_codecs(),
+                    help="storage codec for the built index (int8 decodes "
+                         "on device after gather)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard count for the built index")
+    ap.add_argument("--load-index", default=None,
+                    help="serve this existing index directory instead of "
+                         "building one (corpus/config flags must match the "
+                         "build)")
     ap.add_argument("--backend", default="blocked",
                     choices=["plain", "blocked", "pallas"],
                     help="compute backend for indexing and serving "
@@ -59,45 +75,34 @@ def main() -> None:
                              doc_len=cfg.max_doc_len - 2, seed=0)
     params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
 
-    # ---- phase 1: index ----------------------------------------------------
-    e = cfg.compress_dim or cfg.backbone.d_model
-    idx = TermRepIndex(args.index_dir, rep_dim=e, dtype="float16", l=cfg.l,
-                       compressed=bool(cfg.compress_dim),
-                       max_doc_len=cfg.max_doc_len)
-    t0 = time.time()
-    precompute = jax.jit(lambda p, d, v: precompute_docs(p, cfg, d, v))
-    for lo in range(0, world.n_docs, args.index_batch):
-        chunk = world.docs[lo: lo + args.index_batch]
-        docs = np.zeros((len(chunk), cfg.max_doc_len), np.int32)
-        lengths = []
-        for i, d in enumerate(chunk):
-            packed = np.concatenate([d[: cfg.max_doc_len - 1], [2]])
-            docs[i, : len(packed)] = packed
-            lengths.append(len(packed))
-        valid = np.arange(cfg.max_doc_len)[None] < np.asarray(lengths)[:, None]
-        reps = precompute(params, jnp.asarray(docs), jnp.asarray(valid))
-        idx.add_docs(np.asarray(reps), lengths)
-    idx.finalize()
-    t_index = time.time() - t0
-    idx = TermRepIndex.open(args.index_dir)
-    print(f"[index] {len(idx)} docs in {t_index:.1f}s, "
-          f"{idx.storage_bytes()/2**20:.1f} MiB "
-          f"(e={e}, fp16; raw d={cfg.backbone.d_model} fp32 would be "
-          f"{idx.storage_bytes() * cfg.backbone.d_model * 2 / max(e,1) / 2**20:.1f} MiB)")
+    # ---- phase 1: index (offline pipeline) ---------------------------------
+    if args.load_index:
+        idx = TermRepIndex.open(args.load_index)
+        print(f"[index] loaded {len(idx)} docs from {args.load_index} "
+              f"(v{idx.version}, {idx.n_shards} shards, "
+              f"codec={idx.codec.name}, "
+              f"{idx.storage_bytes() / 2**20:.1f} MiB)")
+    else:
+        builder = IndexBuilder(args.index_dir, cfg, params,
+                               codec=args.codec, n_shards=args.shards,
+                               batch_size=args.index_batch,
+                               backend=args.backend)
+        report = builder.build(list(world.docs))
+        idx = TermRepIndex.open(args.index_dir)
+        e = cfg.compress_dim or cfg.backbone.d_model
+        raw = report.n_tokens * cfg.backbone.d_model * 4
+        print(f"[index] {report.n_docs} docs in {report.wall_s:.1f}s "
+              f"({report.n_shards} shards, codec={report.codec}, "
+              f"encode={report.encode_s:.1f}s write={report.write_s:.1f}s), "
+              f"{report.storage_bytes / 2**20:.1f} MiB "
+              f"(e={e}; raw d={cfg.backbone.d_model} fp32 would be "
+              f"{raw / 2**20:.1f} MiB)")
 
     # ---- phase 2: serve -----------------------------------------------------
-    def pack_query(qi):
-        q = np.zeros(cfg.max_query_len, np.int32)
-        packed = np.concatenate([[1], world.queries[qi], [2]])[
-            : cfg.max_query_len]
-        q[: len(packed)] = packed
-        qv = np.arange(cfg.max_query_len) < len(packed)
-        return q, qv
-
     if args.service:
         svc = RankingService(params, cfg, idx, micro_batch=args.micro_batch)
         # warm the jit caches (encode + the packed join shape) off the clock
-        q0, qv0 = pack_query(0)
+        q0, qv0 = pack_query(world.queries[0], cfg.max_query_len)
         svc.rank(q0, qv0, list(world.candidates(0, k=args.candidates)),
                  request_id="warmup")
         svc.reset_stats()
@@ -105,7 +110,7 @@ def main() -> None:
         t0 = time.perf_counter()
         for lo in range(0, world.n_queries, args.concurrency):
             for qi in range(lo, min(lo + args.concurrency, world.n_queries)):
-                q, qv = pack_query(qi)
+                q, qv = pack_query(world.queries[qi], cfg.max_query_len)
                 svc.submit(RankRequest(
                     q, qv, list(world.candidates(qi, k=args.candidates)),
                     request_id=str(qi)))
@@ -128,7 +133,7 @@ def main() -> None:
     lat, p20 = [], []
     for qi in range(world.n_queries):
         cands = list(world.candidates(qi, k=args.candidates))
-        q, qv = pack_query(qi)
+        q, qv = pack_query(world.queries[qi], cfg.max_query_len)
         ranked, scores, stats = rr.rerank(q, qv, cands)
         lat.append(stats)
         p20.append(precision_at_k(world.qrels[qi][np.asarray(ranked)], 20))

@@ -9,6 +9,10 @@
 
 The public surface is unchanged: ``Reranker(params, cfg, index, ...)`` and
 ``rerank(q_tokens, q_valid, doc_ids) -> (ranked_ids, scores, RerankStats)``.
+The index may be any :class:`~repro.index.store.TermRepIndex` — legacy v1
+single-file or a sharded, codec-encoded v2 index from
+:class:`repro.index.IndexBuilder` (int8 streams decode on device inside
+the service's scoring step).
 Each ``rerank`` call submits one :class:`RankRequest` to a private service
 and drains it, so per-query numerics, the query-rep LRU cache, the fixed
 micro-batch shapes, and the deadline/split straggler policy (now the

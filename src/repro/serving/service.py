@@ -226,8 +226,8 @@ def validate_index_compat(cfg: P.PreTTRConfig, index: TermRepIndex) -> None:
             f"config joins at l={cfg.l}; re-index or change the config")
     # indexes built without an explicit max_doc_len record 0 — fall back to
     # the longest stored document so truncation still cannot slip through
-    idx_max = index.max_doc_len or max(
-        (n for _, n in index._offsets), default=0)
+    lengths = index.doc_lengths
+    idx_max = index.max_doc_len or (int(lengths.max()) if len(lengths) else 0)
     if idx_max > cfg.max_doc_len:
         raise ValueError(
             f"index max_doc_len={idx_max} exceeds config "
@@ -290,6 +290,13 @@ class RankingService:
             lambda p, t, v: P.encode_query(p, cfg, t, v))
         self._join = join_fn or jax.jit(
             lambda p, qr, qv, st, dv: P.join_and_score(p, cfg, qr, qv, st, dv))
+        # codec-aware staging: quantizing codecs (int8) ship their narrow
+        # raw streams over H2D and decode on device, just before the join;
+        # identity codecs (fp16/fp32) feed stored bytes straight through
+        codec = getattr(index, "codec", None)
+        self._decode = None
+        if codec is not None and not codec.decode_is_identity:
+            self._decode = jax.jit(codec.decode)
 
         self._qcache: OrderedDict = OrderedDict()
         self._cache_size = cache_size
@@ -392,14 +399,21 @@ class RankingService:
         return _Plan(rows=rows)
 
     def _stage(self, plan: _Plan):
-        """Host-side staging of one planned batch: index gather, H2D copy,
-        and per-row query-rep batch assembly (padding rows replicate the
-        last real row; their scores are discarded).
-        -> (qr, qv, dreps, dval, load_dt)."""
+        """Host-side staging of one planned batch: index gather (the
+        codec's raw streams — for int8 the narrow encoded payload, decoded
+        on device), H2D copy, and per-row query-rep batch assembly (padding
+        rows replicate the last real row; their scores are discarded).
+        -> (qr, qv, dparts, dval, load_dt)."""
         t0 = time.perf_counter()
-        reps, dvalid = self.index.gather(
-            [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
-        dreps = jax.device_put(reps)
+        gather_raw = getattr(self.index, "gather_raw", None)
+        if gather_raw is not None:
+            parts, dvalid = gather_raw(
+                [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
+        else:                              # index stand-ins without codecs
+            reps, dvalid = self.index.gather(
+                [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
+            parts = {"reps": reps}
+        dreps = jax.device_put(parts)
         dval = jax.device_put(dvalid)
         last = next(s for s, _, _ in reversed(plan.rows) if s is not None)
         qr = jnp.concatenate(
@@ -474,12 +488,13 @@ class RankingService:
         return done
 
     # -- device step ---------------------------------------------------------
-    def _score_plan(self, plan: _Plan, qr, qv, dreps, dval, load_dt: float,
+    def _score_plan(self, plan: _Plan, qr, qv, dparts, dval, load_dt: float,
                     done: list[RankResponse]):
         rows = plan.rows
         t0 = time.perf_counter()
+        st = self._decode(dparts) if self._decode else dparts["reps"]
         scores = np.asarray(jax.device_get(
-            self._join(self.params, qr, qv, dreps, dval)))
+            self._join(self.params, qr, qv, st, dval)))
         dt = time.perf_counter() - t0
 
         states = [s for s, _, _ in rows if s is not None]

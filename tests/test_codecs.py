@@ -1,0 +1,90 @@
+"""Storage-codec numerics: registry contract, per-codec round-trips
+(hypothesis property sweeps), and the storage-accounting arithmetic."""
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # minimal deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.index.codecs import (available_codecs, codec_for_v1_dtype,
+                                get_codec)
+
+CODECS = ["fp32", "fp16", "int8"]
+
+
+def _reps(seed: int, n_tokens: int, e: int, scale_pow: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n_tokens, e)) * 10.0 ** scale_pow) \
+        .astype(np.float32)
+
+
+def test_registry():
+    assert set(CODECS) <= set(available_codecs())
+    for name in CODECS:
+        assert get_codec(name).name == name
+    with pytest.raises(ValueError, match="unknown storage codec"):
+        get_codec("zstd")
+    assert codec_for_v1_dtype("float16").name == "fp16"
+    assert codec_for_v1_dtype("<f4").name == "fp32"
+    with pytest.raises(ValueError, match="no v1 codec"):
+        codec_for_v1_dtype("int8")
+
+
+@settings(max_examples=24)
+@given(name=st.sampled_from(CODECS),
+       n_tokens=st.integers(min_value=0, max_value=9),
+       e=st.sampled_from([1, 3, 16]),
+       scale_pow=st.integers(min_value=-3, max_value=2),
+       seed=st.integers(min_value=0, max_value=99))
+def test_roundtrip(name, n_tokens, e, scale_pow, seed):
+    codec = get_codec(name)
+    x = _reps(seed, n_tokens, e, scale_pow)
+    parts = codec.encode(x)
+    assert set(parts) == set(codec.streams(e))
+    for sname, (dt, row_shape) in codec.streams(e).items():
+        assert parts[sname].dtype == dt
+        assert parts[sname].shape == (n_tokens, *row_shape)
+    dec = np.asarray(codec.decode(parts), np.float32)
+    if name == "fp32":
+        np.testing.assert_array_equal(dec, x)
+    elif name == "fp16":
+        np.testing.assert_array_equal(dec, x.astype(np.float16))
+    else:                               # int8: error bounded by half a step
+        if n_tokens:
+            step = np.maximum(np.abs(x).max(axis=-1), 1e-12) / 127.0
+            assert np.all(np.abs(dec - x) <= 0.5 * step[:, None] + 1e-12)
+    # encode is deterministic and stable under re-encoding its own decode
+    parts2 = codec.encode(np.asarray(codec.decode(parts), np.float32))
+    for sname in parts:
+        np.testing.assert_array_equal(parts[sname], parts2[sname])
+
+
+@settings(max_examples=12)
+@given(name=st.sampled_from(CODECS), e=st.sampled_from([1, 8, 128]))
+def test_bytes_per_token_matches_encoded_payload(name, e):
+    codec = get_codec(name)
+    x = _reps(0, 5, e, 0)
+    parts = codec.encode(x)
+    assert sum(p.nbytes for p in parts.values()) == 5 * codec.bytes_per_token(e)
+
+
+def test_int8_decode_is_device_traceable():
+    import jax
+
+    codec = get_codec("int8")
+    x = _reps(3, 7, 16, 0)
+    parts = codec.encode(x)
+    host = np.asarray(codec.decode(parts), np.float32)
+    dev = np.asarray(jax.jit(codec.decode)(
+        {k: np.asarray(v) for k, v in parts.items()}))
+    np.testing.assert_allclose(dev, host, rtol=1e-6, atol=1e-7)
+
+
+def test_identity_flags():
+    assert get_codec("fp16").decode_is_identity
+    assert get_codec("fp32").decode_is_identity
+    assert not get_codec("int8").decode_is_identity
+    # fp16 decode hands back the stored array object: the bit-exact path
+    parts = get_codec("fp16").encode(_reps(1, 4, 8, 0))
+    assert get_codec("fp16").decode(parts) is parts["reps"]
