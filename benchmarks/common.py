@@ -7,6 +7,7 @@ latency vs l — reproduce the structure of the paper's Tables 3-6.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -82,9 +83,61 @@ def eval_ranker(params, cfg: PreTTRConfig, world, k_cands: int = 48):
 
 
 def timer(fn, *args, reps: int = 5, warmup: int = 2):
+    """Mean wall time of ``fn(*args)`` over ``reps`` post-warmup calls.
+
+    Every timed region ends with ``jax.block_until_ready`` on *all* of
+    ``fn``'s outputs (the whole pytree) — jax dispatch is async, so a
+    timestamp taken before the outputs resolve books device time into
+    whichever phase happens to synchronize next.  Callers timing side
+    effects ``fn`` doesn't return (e.g. ``device_put`` staging) must block
+    on those arrays themselves before the clock stops."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps
+
+
+# -- serving perf trajectory (BENCH_serving.json at the repo root) -----------
+
+BENCH_SERVING_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serving.json")
+
+
+def assert_bench_schema(rows) -> None:
+    """The BENCH_serving.json contract future PRs diff against: a JSON
+    list of ``{"name": str, "value": finite number, "unit": str}`` rows
+    with unique names.  Raises on any violation — with real ``raise``
+    statements, not ``assert``, so the gate survives ``python -O``."""
+    import math
+    if not isinstance(rows, list) or not rows:
+        raise AssertionError("bench rows: non-empty list required")
+    names = []
+    for r in rows:
+        if not isinstance(r, dict) or set(r) != {"name", "value", "unit"}:
+            raise AssertionError(
+                f"bench row keys must be exactly name/value/unit: {r!r}")
+        if not (isinstance(r["name"], str) and r["name"]):
+            raise AssertionError(f"bench row name must be non-empty: {r!r}")
+        if not (isinstance(r["unit"], str) and r["unit"]):
+            raise AssertionError(f"bench row unit must be non-empty: {r!r}")
+        if (not isinstance(r["value"], (int, float))
+                or isinstance(r["value"], bool)
+                or not math.isfinite(float(r["value"]))):
+            raise AssertionError(f"bench row value must be finite: {r!r}")
+        names.append(r["name"])
+    if len(names) != len(set(names)):
+        raise AssertionError("duplicate bench row names")
+
+
+def write_bench_serving(rows, path: str | None = None) -> str:
+    """Validate + write the serving perf rows; returns the path."""
+    import json
+    assert_bench_schema(rows)
+    path = path or BENCH_SERVING_PATH
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+        f.write("\n")
+    return path

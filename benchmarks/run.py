@@ -67,6 +67,24 @@ def main() -> None:
         print(f"storage/clueweb_reduction,"
               f"{rows[0]['reduction_fp16']:.4f},frac (paper: 0.975)")
 
+    if "serving" not in skip:
+        # the serving perf trajectory: legacy vs fused+cache on a zipf
+        # candidate stream -> repo-root BENCH_serving.json.  --fast shrinks
+        # the workload and validates the row schema WITHOUT writing: tiny
+        # dispatch-bound sizes must never overwrite the committed
+        # trajectory numbers
+        from benchmarks.common import assert_bench_schema
+        t0 = time.time()
+        sizes = (dict(n_queries=8, candidates=8, concurrency=4,
+                      micro_batch=16, n_docs=64, max_d=64) if args.fast
+                 else {})
+        rows = table5_latency.run_service(write_bench=not args.fast, **sizes)
+        assert_bench_schema(rows)
+        results["serving_bench"] = rows
+        for r in rows:
+            print(f"{r['name']},{r['value']:.4f},{r['unit']}")
+        print(f"serving/runtime,{time.time()-t0:.1f},seconds")
+
     if "roofline" not in skip and os.path.isdir("results/dryrun"):
         from benchmarks import roofline
         report = roofline.report()

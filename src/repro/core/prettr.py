@@ -12,10 +12,17 @@ Three phases, one parameter set:
   index stores.  Because of the split mask, these are bit-identical in
   function to what the joint forward would have produced for the doc side.
 * **Query** — :func:`encode_query` runs the query through layers ``0..l``
-  once (reused for every candidate); :func:`join_and_score` concatenates the
-  query reps with the loaded doc reps, runs layers ``l..n-1`` jointly, and
+  once (reused for every candidate); :func:`join_and_score` joins the query
+  reps with the loaded doc reps, runs layers ``l..n-1`` jointly, and
   finishes with a **CLS-only final layer** (paper §6.3: the ranking score
   reads only [CLS], so the last layer computes a single attention row).
+  The join is built around a :class:`JoinState` with two execution paths:
+  the **fused** default keeps the query/doc segments as separate arrays —
+  attention runs over the split K/V pair via the ``join_attention``
+  backend op, and layer ``l`` can consume the index's precomputed doc K/V
+  streams (:func:`precompute_doc_kv`, MORES-style) instead of re-projecting
+  them per query — while ``fused=False`` is the legacy concat path (the
+  equivalence oracle).
 
 Equivalence invariant (tested in tests/test_prettr.py): for any (q, d),
 ``rank_forward == join_and_score(encode_query, precompute_docs)`` up to
@@ -45,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compression as C
+from repro.dist.context import maybe_shard
 from repro.models import backend as B
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -229,33 +237,263 @@ def encode_query(params, cfg: PreTTRConfig, q_tokens, q_valid):
     return x
 
 
-def join_and_score(params, cfg: PreTTRConfig, q_reps, q_valid, doc_store,
-                   doc_valid):
-    """Query-time join: q_reps [B, Lq, d] (+valid), doc_store [B, Ld, e|d]
-    (loaded from the index) -> scores [B].  Runs layers l..n-1 jointly and a
-    CLS-only final layer."""
+def precompute_doc_kv(params, cfg: PreTTRConfig, doc_store):
+    """Index-time: layer-``l`` doc-side K/V from the *stored* reps — the
+    join's query-invariant projections (MORES: the doc half of the first
+    interaction layer never sees the query, so it can move to index time).
+
+    ``doc_store``: [N, Ld, e|d] exactly as :func:`precompute_docs` returned
+    it (the round-trip through the compressor / storage dtype is part of
+    the definition: the streams must match what the query-time join would
+    recompute from the index bytes).  Returns ``(k, v)`` each
+    [N, Ld, n_kv_heads * dh] in ``cfg.store_dtype``.
+    """
     bcfg = cfg.backbone
-    b, lq, _ = q_reps.shape
-    ld = doc_store.shape[1]
+    x_d = _decode_doc_store(params, cfg, doc_store)
+    n, ld, _ = x_d.shape
+    pos_d = jnp.broadcast_to(cfg.max_query_len + jnp.arange(ld), (n, ld))
+    lp = jax.tree.map(lambda a: a[cfg.l], params["backbone"]["layers"])
+    h_d = L.apply_norm(lp["ln1"], x_d, bcfg.norm)
+    k, v = T.project_kv(lp["attn"], h_d, bcfg, positions=pos_d,
+                        rope_base=bcfg.layer_rope_bases()[cfg.l])
+    flat = bcfg.n_kv_heads * bcfg.dh
+    return (k.reshape(n, ld, flat).astype(cfg.store_dtype),
+            v.reshape(n, ld, flat).astype(cfg.store_dtype))
+
+
+def _decode_doc_store(params, cfg: PreTTRConfig, doc_store):
+    """Index bytes -> join-input doc reps [B, Ld, d] in compute dtype."""
+    bcfg = cfg.backbone
     if cfg.compress_dim:
-        d_reps = C.decompress(params["compressor"], doc_store,
-                              compute_dtype=bcfg.compute_dtype,
-                              impl=bcfg.compress_impl)
+        return C.decompress(params["compressor"], doc_store,
+                            compute_dtype=bcfg.compute_dtype,
+                            impl=bcfg.compress_impl)
+    return doc_store.astype(bcfg.compute_dtype)
+
+
+@dataclasses.dataclass
+class JoinState:
+    """Query-time join operands, segment-resident.
+
+    The two segments stay separate arrays end to end on the fused path —
+    the ``[B, Lq+Ld, d]`` concatenation the legacy path materializes never
+    exists; attention runs over the split K/V pair via the
+    ``join_attention`` backend op.  ``doc_k``/``doc_v`` (optional) are the
+    index's stored layer-``l`` K/V streams in model layout, letting layer
+    ``l`` skip the doc-side K/V projections entirely.
+    """
+    x_q: Any                         # [B, Lq, d] query reps (compute dtype)
+    q_valid: Any                     # [B, Lq] bool
+    x_d: Any                         # [B, Ld, d] decoded doc reps
+    d_valid: Any                     # [B, Ld] bool
+    doc_k: Any = None                # [B, Ld, Hkv, Dh] stored layer-l K
+    doc_v: Any = None                # [B, Ld, Hkv, Dh] stored layer-l V
+    fused: bool = True
+
+
+def prepare_join(params, cfg: PreTTRConfig, q_reps, q_valid, doc_store,
+                 doc_valid, *, doc_kv=None, fused: bool = True) -> JoinState:
+    """Decode the index payload and build the :class:`JoinState` that
+    :func:`score_join` consumes.  ``doc_kv``: optional ``(k, v)`` stored
+    layer-``l`` streams, each [B, Ld, n_kv_heads * dh] (fused path only)."""
+    bcfg = cfg.backbone
+    x_d = _decode_doc_store(params, cfg, doc_store)
+    doc_k = doc_v = None
+    if doc_kv is not None:
+        if not fused:
+            raise ValueError(
+                "stored layer-l doc K/V streams require the fused join "
+                "path (the legacy concat path re-projects at layer l)")
+        b, ld = x_d.shape[0], x_d.shape[1]
+        doc_k, doc_v = (a.reshape(b, ld, bcfg.n_kv_heads, bcfg.dh)
+                        .astype(bcfg.compute_dtype) for a in doc_kv)
+    if fused:
+        windows = bcfg.layer_windows()[cfg.l:]
+        if bcfg.causal or any(w > 0 for w in windows) or bcfg.n_experts:
+            raise ValueError(
+                "the fused join path serves bidirectional, validity-masked "
+                "dense join layers only (no causal/window masks, no MoE); "
+                "pass fused=False for this architecture")
+        if cfg.cls_only_last_layer and (bcfg.rope or bcfg.use_qk_norm):
+            # the legacy CLS-only layer predates qk-norm and ropes its
+            # query row at the [CLS] position; the split CLS layer shares
+            # project_q/project_kv with the rest of the join, which would
+            # silently diverge here — fail instead of drifting
+            raise ValueError(
+                "the fused join's CLS-only final layer does not support "
+                "rope/use_qk_norm backbones; pass fused=False (PreTTR's "
+                "BERT-style backbones use learned positions)")
+    return JoinState(x_q=q_reps.astype(bcfg.compute_dtype), q_valid=q_valid,
+                     x_d=x_d, d_valid=doc_valid, doc_k=doc_k, doc_v=doc_v,
+                     fused=fused)
+
+
+def _join_layer_split(lp, bcfg: T.TransformerConfig, x_q, x_d, q_valid,
+                      d_valid, pos_q, pos_d, rope_base, doc_kv=None):
+    """One join layer over the split residual (x_q, x_d) — the per-segment
+    twin of ``transformer._layer_step`` for the mask-free join layers.
+    Every non-attention op is row-wise, so running it per segment is
+    bit-identical to running it on the concatenation; attention dispatches
+    the ``join_attention`` backend op over the split K/V pair.  The (tiny,
+    query-time-produced) Q blocks are stacked so each layer issues exactly
+    one attention call — it is the K/V side, fed from index buffers, that
+    is never concatenated."""
+    cd = bcfg.compute_dtype
+    dh = bcfg.dh
+    lq = x_q.shape[1]
+    h_q = L.apply_norm(lp["ln1"], x_q, bcfg.norm)
+    h_d = L.apply_norm(lp["ln1"], x_d, bcfg.norm)
+    p = lp["attn"]
+    qq = T.project_q(p, h_q, bcfg, positions=pos_q, rope_base=rope_base)
+    qd = T.project_q(p, h_d, bcfg, positions=pos_d, rope_base=rope_base)
+    kq, vq = T.project_kv(p, h_q, bcfg, positions=pos_q, rope_base=rope_base)
+    if doc_kv is None:
+        kd, vd = T.project_kv(p, h_d, bcfg, positions=pos_d,
+                              rope_base=rope_base)
+    else:                      # layer l: index-stored, projections skipped
+        kd, vd = doc_kv
+    impl = B.get_impl("join_attention", bcfg.attn_impl)
+    out = impl(jnp.concatenate([qq, qd], axis=1), kq, vq, kd, vd, cfg=bcfg,
+               scale=1.0 / math.sqrt(dh),
+               q_valid=jnp.concatenate([q_valid, d_valid], axis=1),
+               kq_valid=q_valid, kd_valid=d_valid)
+
+    def _finish(x, out):
+        b, s = x.shape[0], x.shape[1]
+        attn_out = out.reshape(b, s, bcfg.n_heads * dh) @ p["wo"].astype(cd)
+        return T.block_tail(lp, bcfg, x, attn_out)[0]
+
+    return _finish(x_q, out[:, :lq]), _finish(x_d, out[:, lq:])
+
+
+def _cls_only_layer_split(lp, bcfg: T.TransformerConfig, x_q, x_d, q_valid,
+                          d_valid, pos_d, doc_kv=None):
+    """Final CLS-only layer (paper §6.3) over the split residual: one
+    attention row ([CLS] lives in the query segment) against the split K/V
+    pair.  x_q: [B, Lq, d]; x_d: [B, Ld, d] -> cls rep [B, d]."""
+    cd = bcfg.compute_dtype
+    dh = bcfg.dh
+    b, lq, _ = x_q.shape
+    h_q = L.apply_norm(lp["ln1"], x_q, bcfg.norm)
+    h_d = L.apply_norm(lp["ln1"], x_d, bcfg.norm)
+    p = lp["attn"]
+    q_pos = jnp.full((b, 1), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+    q = T.project_q(p, h_q[:, :1], bcfg, positions=q_pos)
+    pos_q = jnp.broadcast_to(jnp.arange(lq), (b, lq))
+    kq, vq = T.project_kv(p, h_q, bcfg, positions=pos_q)
+    if doc_kv is None:
+        kd, vd = T.project_kv(p, h_d, bcfg, positions=pos_d)
     else:
-        d_reps = doc_store.astype(bcfg.compute_dtype)
-    x = jnp.concatenate([q_reps.astype(bcfg.compute_dtype), d_reps], axis=1)
+        kd, vd = doc_kv
+    impl = B.get_impl("join_attention", bcfg.attn_impl)
+    out = impl(q, kq, vq, kd, vd, cfg=bcfg, scale=1.0 / math.sqrt(dh),
+               q_valid=jnp.ones((b, 1), bool), kq_valid=q_valid,
+               kd_valid=d_valid)
+    out = out.reshape(b, 1, bcfg.n_heads * dh) @ p["wo"].astype(cd)
+    x_cls = x_q[:, :1] + out
+    h2 = L.apply_norm(lp["ln2"], x_cls, bcfg.norm)
+    mlp_p = jax.tree.map(lambda a: a.astype(cd), lp["mlp"])
+    x_cls = x_cls + L.mlp(mlp_p, h2, gated=bcfg.gated_mlp,
+                          activation=bcfg.activation)
+    return x_cls[:, 0]
+
+
+def _score_join_fused(params, cfg: PreTTRConfig, st: JoinState):
+    """Fused query-time join: layers ``l..n-1`` over the split residual."""
+    bcfg = cfg.backbone
+    b, lq, _ = st.x_q.shape
+    ld = st.x_d.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(lq), (b, lq))
+    pos_d = jnp.broadcast_to(cfg.max_query_len + jnp.arange(ld), (b, ld))
+    bases = bcfg.layer_rope_bases()
+    last = bcfg.n_layers - (1 if cfg.cls_only_last_layer else 0)
+    x_q, x_d = st.x_q, st.x_d
+    layers = params["backbone"]["layers"]
+    for li in range(cfg.l, last):
+        lp = jax.tree.map(lambda a: a[li], layers)
+        dkv = ((st.doc_k, st.doc_v)
+               if li == cfg.l and st.doc_k is not None else None)
+        x_q, x_d = _join_layer_split(lp, bcfg, x_q, x_d, st.q_valid,
+                                     st.d_valid, pos_q, pos_d, bases[li],
+                                     doc_kv=dkv)
+        if bcfg.act_shard == "seq":
+            x_q = maybe_shard(x_q, ("batch", "act_seq", None))
+            x_d = maybe_shard(x_d, ("batch", "act_seq", None))
+        elif bcfg.act_shard == "embed":
+            x_q = maybe_shard(x_q, ("batch", None, "embed_tp"))
+            x_d = maybe_shard(x_d, ("batch", None, "embed_tp"))
+    if cfg.cls_only_last_layer:
+        lp = jax.tree.map(lambda a: a[-1], layers)
+        dkv = ((st.doc_k, st.doc_v)
+               if cfg.l == last and st.doc_k is not None else None)
+        cls = _cls_only_layer_split(lp, bcfg, x_q, x_d, st.q_valid,
+                                    st.d_valid, pos_d, doc_kv=dkv)
+    else:
+        cls = x_q[:, 0]
+    return _score_from_cls(params, cfg, cls)
+
+
+def _score_join_concat(params, cfg: PreTTRConfig, st: JoinState):
+    """Legacy concat join: materialize [B, Lq+Ld, d] and run the join
+    layers over it (the pre-fusion query-time path, kept as the
+    equivalence oracle and for architectures the fused path rejects).
+
+    The layers are unrolled (no scan/remat): the join depth ``n - l`` is
+    small by design — the paper's entire speedup is serving few layers —
+    and the layer-scan machinery's remat grouping perturbs fusion enough
+    to cost bit-exactness against the fused path for zero serving-time
+    benefit (there is no backward pass to checkpoint for)."""
+    bcfg = cfg.backbone
+    b, lq, _ = st.x_q.shape
+    ld = st.x_d.shape[1]
+    x = jnp.concatenate([st.x_q, st.x_d], axis=1)
     positions = jnp.broadcast_to(
         jnp.concatenate([jnp.arange(lq), cfg.max_query_len + jnp.arange(ld)]),
         (b, lq + ld))
     segs = jnp.concatenate([jnp.zeros((b, lq), jnp.int32),
                             jnp.ones((b, ld), jnp.int32)], axis=1)
-    valid = jnp.concatenate([q_valid, doc_valid], axis=1)
+    valid = jnp.concatenate([st.q_valid, st.d_valid], axis=1)
     last = bcfg.n_layers - (1 if cfg.cls_only_last_layer else 0)
-    x, _ = T.run_layer_range(params["backbone"], bcfg, x, cfg.l, last,
-                             positions=positions, segs=segs, valid=valid)
+    windows = bcfg.layer_windows()
+    bases = bcfg.layer_rope_bases()
+    for li in range(cfg.l, last):
+        lp = jax.tree.map(lambda a: a[li], params["backbone"]["layers"])
+        x, _, _ = T._layer_step(
+            lp, x, bcfg, positions=positions, window=windows[li],
+            rope_base=bases[li], split_flag=False, segs=segs, valid=valid,
+            seg_boundary=-1, static_window=windows[li], static_split=False)
+        if bcfg.act_shard == "seq":
+            x = maybe_shard(x, ("batch", "act_seq", None))
+        elif bcfg.act_shard == "embed":
+            x = maybe_shard(x, ("batch", None, "embed_tp"))
     if cfg.cls_only_last_layer:
         lp = jax.tree.map(lambda a: a[-1], params["backbone"]["layers"])
         cls = _cls_only_layer(lp, x, bcfg, positions=positions, valid=valid)
     else:
         cls = x[:, 0]
     return _score_from_cls(params, cfg, cls)
+
+
+def score_join(params, cfg: PreTTRConfig, st: JoinState):
+    return (_score_join_fused if st.fused else _score_join_concat)(
+        params, cfg, st)
+
+
+def join_and_score(params, cfg: PreTTRConfig, q_reps, q_valid, doc_store,
+                   doc_valid, *, doc_kv=None, fused: bool = True):
+    """Query-time join: q_reps [B, Lq, d] (+valid), doc_store [B, Ld, e|d]
+    (loaded from the index) -> scores [B].  Runs layers l..n-1 jointly and
+    a CLS-only final layer.
+
+    ``fused=True`` (default — the serving hot path) keeps the two segments
+    as separate arrays and attends over the split K/V pair via the
+    ``join_attention`` backend op; ``doc_kv`` may supply the index's stored
+    layer-``l`` doc K/V streams so layer ``l`` skips all doc-side K/V
+    projections.  ``fused=False`` is the legacy concat path.  Both paths
+    satisfy the equivalence invariant against :func:`rank_forward`; under
+    the reference (plain/blocked) backends they are bit-identical to each
+    other (tests/test_join_attention.py).
+    """
+    st = prepare_join(params, cfg, q_reps, q_valid, doc_store, doc_valid,
+                      doc_kv=doc_kv, fused=fused)
+    return score_join(params, cfg, st)

@@ -72,17 +72,17 @@ def shard_ranges(n_docs: int, n_shards: int) -> list[tuple[int, int]]:
 
 
 class _ShardWriter:
-    """Append-only writer for one shard directory: one open file per codec
-    stream, plus the per-doc token counts the manifest needs."""
+    """Append-only writer for one shard directory: one open file per
+    per-token stream (the codec's, plus the optional layer-l K/V pair),
+    plus the per-doc token counts the manifest needs."""
 
-    def __init__(self, root: str, shard_id: int, codec: StorageCodec,
-                 rep_dim: int):
+    def __init__(self, root: str, shard_id: int, stream_names):
         self.dir_name = f"shard-{shard_id:05d}"
         self.path = os.path.join(root, self.dir_name)
         os.makedirs(self.path, exist_ok=True)
         self._handles = {
             name: open(os.path.join(self.path, f"{name}.bin"), "wb")
-            for name in codec.streams(rep_dim)}
+            for name in stream_names}
         self.lengths: list[int] = []
 
     def append(self, parts: dict[str, np.ndarray], n_tokens: int):
@@ -116,17 +116,25 @@ class IndexBuilder:
     the in-flight device batches the writer thread may lag behind
     (``0`` = synchronous writes, for debugging).  ``backend`` reroutes the
     encode through a compute-backend family exactly as on the serving
-    classes.
+    classes.  ``store_layer_kv=True`` additionally precomputes the join
+    layer's doc-side K/V (``precompute_doc_kv``) and writes them as the
+    ``layer_k``/``layer_v`` streams, so the fused query-time join skips
+    all doc-side K/V projections at layer ``l`` (costs
+    ``2 * n_kv_heads * head_dim`` extra stored values per token).
     """
 
     def __init__(self, out_dir: str, cfg: P.PreTTRConfig, params, *,
                  codec: str | StorageCodec = "fp16", n_shards: int = 1,
                  batch_size: int = 64, mesh=None, writer_depth: int = 2,
-                 backend: str | None = None):
+                 backend: str | None = None, store_layer_kv: bool = False):
         if backend is not None:
             from repro.models.backend import apply_backend
             cfg = apply_backend(cfg, backend)
         self.codec = get_codec(codec) if isinstance(codec, str) else codec
+        # the optional layer-l K/V streams keep the *model's* storage dtype
+        # (they are raw float projections, not codec payload)
+        self.store_layer_kv = bool(store_layer_kv)
+        self._kv_dtype = np.dtype(jnp.dtype(cfg.store_dtype).name)
         # quantizing codecs encode from full precision; float codecs store
         # the model's own store_dtype bytes unchanged (fp16 stays bit-exact
         # with the in-memory rank_forward round-trip)
@@ -139,12 +147,39 @@ class IndexBuilder:
         self.mesh = mesh
         self.writer_depth = max(0, writer_depth)
         self.rep_dim = cfg.compress_dim or cfg.backbone.d_model
+        self.kv_dim = cfg.backbone.n_kv_heads * cfg.backbone.dh
         ndev = mesh.size if mesh is not None else 1
         # fixed jit shape, divisible by the data-parallel mesh
         self.batch_size = -(-max(1, batch_size) // ndev) * ndev
         self._params_replicated = None
         self._encode = jax.jit(
             lambda p, d, v: P.precompute_docs(p, self.cfg, d, v))
+        # stored K/V must be computed from the bytes the index will serve,
+        # i.e. after the codec round trip: identity codecs feed the encode
+        # output straight through; quantizing codecs (int8) re-decode the
+        # encoded streams on device first (what the query-time join sees)
+        self._encode_kv = jax.jit(
+            lambda p, st: P.precompute_doc_kv(p, self.cfg, st))
+        self._encode_kv_raw = jax.jit(
+            lambda p, parts: P.precompute_doc_kv(
+                p, self.cfg, self.codec.decode(parts)))
+
+    def _batch_kv(self, reps_dev):
+        """Layer-l K/V for one encoded batch, from codec-roundtripped
+        reps.  The quantizing-codec branch materializes the batch on the
+        host to run the (numpy) encoder — it costs the encode/write
+        overlap, which only store_layer_kv int8 builds pay."""
+        if self.codec.decode_is_identity:
+            return self._encode_kv(self._params_for_encode(), reps_dev)
+        parts = self.codec.encode(np.asarray(reps_dev))
+        return self._encode_kv_raw(self._params_for_encode(),
+                                   jax.device_put(parts))
+
+    def _stream_names(self):
+        names = list(self.codec.streams(self.rep_dim))
+        if self.store_layer_kv:
+            names += ["layer_k", "layer_v"]
+        return names
 
     # -- device side -----------------------------------------------------------
     def _device_batch(self, tokens: np.ndarray, valid: np.ndarray):
@@ -189,7 +224,7 @@ class IndexBuilder:
         n_docs = len(docs)
         ranges = shard_ranges(n_docs, self.n_shards)
         boundaries = np.asarray([lo for lo, _ in ranges], np.int64)
-        writers = [_ShardWriter(self.out_dir, s, self.codec, self.rep_dim)
+        writers = [_ShardWriter(self.out_dir, s, self._stream_names())
                    for s in range(self.n_shards)]
         err: list = []
         write_s = [0.0]
@@ -209,19 +244,22 @@ class IndexBuilder:
                     chunk, self.cfg.max_doc_len)
                 t0 = time.perf_counter()
                 reps_dev = self._device_batch(tokens, valid)
+                kv_dev = (self._batch_kv(reps_dev)
+                          if self.store_layer_kv else None)
                 encode_s += time.perf_counter() - t0
                 if worker is not None:
                     # bounded put that never deadlocks on a dead writer
                     while not err:
                         try:
-                            work_q.put((reps_dev, lengths, lo), timeout=0.1)
+                            work_q.put((reps_dev, kv_dev, lengths, lo),
+                                       timeout=0.1)
                             break
                         except queue.Full:
                             continue
                     if err:
                         break
                 else:                       # synchronous debug path
-                    self._write_batch(reps_dev, lengths, lo, writers,
+                    self._write_batch(reps_dev, kv_dev, lengths, lo, writers,
                                       boundaries, write_s)
         finally:
             if worker is not None:
@@ -246,31 +284,45 @@ class IndexBuilder:
                     # must replay the build's fixed shape
                     "encode_batch": self.batch_size,
                     "shards": [w.manifest_row() for w in writers]}
+        if self.store_layer_kv:
+            manifest["layer_kv"] = {"dtype": self._kv_dtype.str,
+                                    "d_kv": self.kv_dim}
         with open(os.path.join(self.out_dir, "manifest.msgpack"), "wb") as f:
             f.write(msgpack.packb(manifest))
 
         n_tokens = sum(sum(w.lengths) for w in writers)
         on_disk = sum(
             os.path.getsize(os.path.join(w.path, f"{name}.bin"))
-            for w in writers for name in self.codec.streams(self.rep_dim))
+            for w in writers for name in self._stream_names())
         return BuildReport(
             n_docs=n_docs, n_tokens=n_tokens, n_shards=self.n_shards,
             codec=self.codec.name, storage_bytes=on_disk,
             encode_s=encode_s, write_s=write_s[0],
             wall_s=time.perf_counter() - t_wall)
 
-    def _write_batch(self, reps_dev, lengths, doc_lo, writers, boundaries,
-                     write_s):
+    def _params_for_encode(self):
+        return (self._params_replicated
+                if self._params_replicated is not None else self.params)
+
+    def _write_batch(self, reps_dev, kv_dev, lengths, doc_lo, writers,
+                     boundaries, write_s):
         """Materialize one device batch and append it to its shards.  The
         ``np.asarray`` blocks on the device — in the threaded path
         everything after it overlaps the device encoding the next batch."""
         t0 = time.perf_counter()
         reps = np.asarray(reps_dev)
+        kv = None
+        if kv_dev is not None:
+            kv = (np.asarray(kv_dev[0]).astype(self._kv_dtype),
+                  np.asarray(kv_dev[1]).astype(self._kv_dtype))
         for i, n in enumerate(lengths):
             shard = int(np.searchsorted(boundaries, doc_lo + i,
                                         side="right") - 1)
-            writers[shard].append(self.codec.encode(reps[i, : int(n)]),
-                                  int(n))
+            parts = self.codec.encode(reps[i, : int(n)])
+            if kv is not None:
+                parts["layer_k"] = kv[0][i, : int(n)]
+                parts["layer_v"] = kv[1][i, : int(n)]
+            writers[shard].append(parts, int(n))
         write_s[0] += time.perf_counter() - t0
 
 
@@ -295,8 +347,13 @@ def verify_index(index: TermRepIndex, cfg: P.PreTTRConfig, params,
     vcfg = dataclasses.replace(cfg, store_dtype=store_dtype)
     batch = int(getattr(index, "encode_batch", 0) or len(ids))
     encode = jax.jit(lambda p, d, v: P.precompute_docs(p, vcfg, d, v))
+    encode_kv = jax.jit(lambda p, st: P.precompute_doc_kv(p, vcfg, st))
+    encode_kv_raw = jax.jit(lambda p, parts: P.precompute_doc_kv(
+        p, vcfg, codec.decode(parts)))
     parts, got_valid = index.gather_raw([int(i) for i in ids],
                                         pad_to=cfg.max_doc_len)
+    kv_dtype = (np.dtype(index.layer_kv["dtype"])
+                if index.has_layer_kv else None)
     for lo in range(0, len(ids), batch):
         chunk = ids[lo: lo + batch]
         tokens, lengths, valid = pack_doc_batch([docs[i] for i in chunk],
@@ -307,11 +364,23 @@ def verify_index(index: TermRepIndex, cfg: P.PreTTRConfig, params,
                 [tokens, np.zeros((pad, tokens.shape[1]), tokens.dtype)])
             valid = np.concatenate(
                 [valid, np.zeros((pad, valid.shape[1]), bool)])
-        reps = np.asarray(encode(params, jnp.asarray(tokens),
-                                 jnp.asarray(valid)))
+        reps_dev = encode(params, jnp.asarray(tokens), jnp.asarray(valid))
+        reps = np.asarray(reps_dev)
+        kv = None
+        if index.has_layer_kv:
+            if codec.decode_is_identity:
+                kv_dev = encode_kv(params, reps_dev)
+            else:                    # replay the build's codec round trip
+                kv_dev = encode_kv_raw(
+                    params, jax.device_put(codec.encode(reps)))
+            kv = (np.asarray(kv_dev[0]).astype(kv_dtype),
+                  np.asarray(kv_dev[1]).astype(kv_dtype))
         for i, (n_tok, rep) in enumerate(zip(lengths, reps)):
             row = lo + i
             want = codec.encode(rep[: int(n_tok)])
+            if kv is not None:
+                want["layer_k"] = kv[0][i, : int(n_tok)]
+                want["layer_v"] = kv[1][i, : int(n_tok)]
             for name, arr in want.items():
                 np.testing.assert_array_equal(
                     parts[name][row, : int(n_tok)], arr,

@@ -20,8 +20,24 @@ returns decoded float batches for the classic API, :meth:`gather_raw`
 returns the codec's raw streams so serving can ship the narrow payload to
 the device and decode there.  Malformed indexes (missing / corrupt /
 version-mismatched metadata) raise :class:`IndexFormatError` naming the
-path.  Storage accounting mirrors §6.2 through the codec's
-``bytes_per_token``.
+path.
+
+**Optional layer-l K/V streams** (v2 only): an index built with
+``IndexBuilder(store_layer_kv=True)`` carries two extra per-token streams,
+``layer_k.bin`` / ``layer_v.bin`` — the doc-side K/V projections of join
+layer ``l`` (``repro.core.prettr.precompute_doc_kv``; MORES: the first
+interaction layer's doc projections are query-invariant, so they move to
+index time).  Each row is ``n_kv_heads * head_dim`` values in the build
+config's storage dtype; the fused query-time join consumes them directly
+and skips all doc-side K/V projections at layer ``l``.  The manifest
+records them under ``layer_kv`` (``{"dtype", "d_kv"}``); indexes without
+the entry (including every v1 index) simply don't expose the streams.
+
+Storage accounting mirrors §6.2 through :meth:`bytes_per_token`: the
+codec's per-token bytes (``codec.bytes_per_token(rep_dim)``) **plus**
+``2 * d_kv * itemsize`` when the K/V streams are present — the classic
+MORES/SDR trade: more bytes per token for strictly less query-time
+compute.
 """
 from __future__ import annotations
 
@@ -77,7 +93,7 @@ def _open_stream(path: str, dtype: np.dtype, row_shape: tuple, n_rows: int):
 class TermRepIndex:
     def __init__(self, path: str, rep_dim: int, dtype: str = "float16",
                  l: int = 0, compressed: bool = False, max_doc_len: int = 0,
-                 codec=None):
+                 codec=None, layer_kv: dict | None = None):
         self.path = path
         self.rep_dim = rep_dim
         self.dtype = np.dtype(dtype)
@@ -86,6 +102,9 @@ class TermRepIndex:
         self.l = l
         self.compressed = compressed
         self.max_doc_len = max_doc_len
+        # optional layer-l doc K/V streams: {"dtype": np-dtype-str,
+        # "d_kv": n_kv_heads * head_dim} (v2 manifests only)
+        self.layer_kv = dict(layer_kv) if layer_kv else None
         self.version = 1                             # v2 set by open()
         self.encode_batch = 0                        # v2 build batch shape
         self._offsets: list[tuple[int, int]] = []    # v1 build: (offset, n)
@@ -184,17 +203,21 @@ class TermRepIndex:
                 f"reader expects version {FORMAT_VERSION}")
         try:
             codec = get_codec(mani["codec"])
+            layer_kv = mani.get("layer_kv") or None
+            if layer_kv is not None:
+                layer_kv = {"dtype": np.dtype(layer_kv["dtype"]).str,
+                            "d_kv": int(layer_kv["d_kv"])}
             idx = cls(path, mani["rep_dim"],
                       codec.streams(mani["rep_dim"])["reps"][0].str,
                       mani["l"], mani["compressed"], mani["max_doc_len"],
-                      codec=codec)
+                      codec=codec, layer_kv=layer_kv)
             shards = mani["shards"]
         except (KeyError, ValueError, TypeError) as e:
             raise IndexFormatError(
                 f"malformed v2 manifest at {manifest_p!r}: {e!r}") from e
         idx.version = 2
         idx.encode_batch = int(mani.get("encode_batch", 0))
-        streams_spec = codec.streams(idx.rep_dim)
+        streams_spec = idx.streams_spec()
         shard_streams, rows = [], []
         for si, sh in enumerate(shards):
             try:
@@ -235,6 +258,38 @@ class TermRepIndex:
         self._readonly = True
 
     @property
+    def has_layer_kv(self) -> bool:
+        """True when the index carries stored layer-``l`` doc K/V streams
+        (``layer_k`` / ``layer_v`` in :meth:`streams_spec`)."""
+        return self.layer_kv is not None
+
+    @property
+    def kv_dim(self) -> int:
+        """Per-token width of each stored K/V stream (0 when absent)."""
+        return int(self.layer_kv["d_kv"]) if self.layer_kv else 0
+
+    def streams_spec(self) -> dict:
+        """All per-token streams of this index: the codec's plus, when
+        present, the layer-``l`` K/V pair -> ``{name: (dtype, row_shape)}``."""
+        spec = dict(self.codec.streams(self.rep_dim))
+        if self.layer_kv:
+            dt = np.dtype(self.layer_kv["dtype"])
+            d_kv = int(self.layer_kv["d_kv"])
+            spec["layer_k"] = (dt, (d_kv,))
+            spec["layer_v"] = (dt, (d_kv,))
+        return spec
+
+    def bytes_per_token(self) -> int:
+        """Stored bytes per token over *all* streams: the codec's
+        ``bytes_per_token(rep_dim)`` plus ``2 * d_kv * itemsize`` for the
+        optional layer-``l`` K/V pair (§6.2 accounting)."""
+        total = self.codec.bytes_per_token(self.rep_dim)
+        if self.layer_kv:
+            dt = np.dtype(self.layer_kv["dtype"])
+            total += 2 * int(self.layer_kv["d_kv"]) * dt.itemsize
+        return total
+
+    @property
     def doc_lengths(self) -> np.ndarray:
         """Per-doc stored token counts ([N] int64; empty before open())."""
         if self._doc_table is not None:
@@ -250,10 +305,15 @@ class TermRepIndex:
             return len(self._doc_table)
         return len(self._offsets)
 
-    def gather_raw(self, doc_ids: Sequence[int], pad_to: int | None = None):
-        """Batched vectorized read of the codec's raw streams: one
+    def gather_raw(self, doc_ids: Sequence[int], pad_to: int | None = None,
+                   streams: Sequence[str] | None = None):
+        """Batched vectorized read of the raw per-token streams: one
         fancy-index gather per (shard, stream) over the memmaps ->
         (``{stream: [N, Ld, ...]}``, valid ``[N, Ld]``).
+
+        ``streams`` restricts the read to a subset of
+        :meth:`streams_spec` (e.g. skip the layer-K/V pair when serving
+        through the legacy join); default is every stream the index has.
 
         This is the hot host-side path of serving — the
         ``RankingService`` prefetcher stages these arrays (narrow encoded
@@ -268,7 +328,14 @@ class TermRepIndex:
                 f"doc id out of range [0, {len(self)}) in gather()")
         pad_to = pad_to or self.max_doc_len or int(max(
             (int(self._doc_table[d, 2]) for d in ids), default=1))
-        spec = self.codec.streams(self.rep_dim)
+        spec = self.streams_spec()
+        if streams is not None:
+            unknown = set(streams) - set(spec)
+            if unknown:
+                raise ValueError(
+                    f"unknown stream(s) {sorted(unknown)}; index has "
+                    f"{sorted(spec)}")
+            spec = {name: spec[name] for name in streams}
         parts = {name: np.zeros((ids.size, pad_to, *row_shape), dt)
                  for name, (dt, row_shape) in spec.items()}
         valid = np.zeros((ids.size, pad_to), bool)
@@ -295,8 +362,12 @@ class TermRepIndex:
         """Decoded float batch: -> (reps [N, Ld, e], valid [N, Ld]).  For
         identity codecs (fp16/fp32) the stored bytes are returned as-is —
         the bit-exact path; int8 decodes host-side here (serving prefers
-        :meth:`gather_raw` + on-device decode)."""
-        parts, valid = self.gather_raw(doc_ids, pad_to=pad_to)
+        :meth:`gather_raw` + on-device decode).  Only the codec's streams
+        are read — the classic float API never touches the (wide) optional
+        layer-K/V pair."""
+        parts, valid = self.gather_raw(
+            doc_ids, pad_to=pad_to,
+            streams=list(self.codec.streams(self.rep_dim)))
         return self.codec.decode(parts), valid
 
     def load_docs(self, doc_ids: Sequence[int], pad_to: int | None = None):
@@ -307,7 +378,7 @@ class TermRepIndex:
 
     # -- accounting (paper §6.2) -----------------------------------------------
     def storage_bytes(self) -> int:
-        return self._n_tokens * self.codec.bytes_per_token(self.rep_dim)
+        return self._n_tokens * self.bytes_per_token()
 
     @staticmethod
     def projected_storage_bytes(n_docs: int, avg_tokens: float, rep_dim: int,

@@ -4,6 +4,9 @@
   causal / sliding-window), block-skip on fully-masked tiles.
 * ``decode_attention`` — GQA flash-decode; also the paper's CLS-only
   final-layer scorer (one query row against the full sequence).
+* ``join_attention`` — split-KV attention for the query-time join: one
+  query block against the union of the (tiny) query-segment K/V and the
+  index-loaded doc-segment K/V, never concatenated.
 * ``fused_compress`` — the PreTTR compressor: GELU bottleneck (d->e) and the
   fused fp16-upcast + expand + LayerNorm decompressor (e->d).
 * ``embedding_bag`` — recsys gather + segment-reduce via scalar-prefetch

@@ -1,0 +1,132 @@
+"""Split-KV join attention — Pallas TPU kernel for PreTTR's query-time join.
+
+The query-time join (layers ``l..n-1``) attends a joint sequence whose K/V
+come from two *physically separate* sources: the freshly-encoded query
+segment (tiny — ``max_query_len`` tokens) and the index-loaded document
+segment.  The legacy path concatenates them into one ``[B, Lq+Ld, ...]``
+buffer first; this kernel consumes the two K/V operands as-is, so the
+doc-side K/V can flow straight from the index's layer-``l`` streams (or
+from the per-segment residual) into the MXU without a concat copy.
+
+Layout: the query-segment K/V is one whole block (its length is bounded by
+``max_query_len``, far below a KV tile), folded into the online-softmax
+state at the first doc tile; the doc segment is tiled normally.  Grid
+``(B, Hq, nQ, nKd)`` with the doc-KV axis innermost — softmax state (m, l,
+acc) lives in VMEM scratch across doc tiles (the standard sequential-grid
+TPU flash pattern, as in ``kernels/split_attention``).  GQA rides the K/V
+index maps (head ``h`` reads KV head ``h * Hkv // Hq``).
+
+The join layers are mask-free apart from validity (no causal / window /
+split structure — the split mask only exists *below* layer ``l``), so the
+only skip predicate is the per-row valid doc length (scalar-prefetched).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _join_kernel(dlen_ref, q_ref, kq_ref, vq_ref, kd_ref, vd_ref,
+                 qval_ref, dval_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 block_k: int, scale: float):
+    b = pl.program_id(0)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _query_segment():
+        # the whole (padded) query-segment KV in one shot: it seeds the
+        # online-softmax state instead of a NEG_INF init
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, D]
+        kq = kq_ref[0, 0].astype(jnp.float32)          # [Lqp, D]
+        vq = vq_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kq, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(qval_ref[...] > 0, s, NEG_INF)   # [1, Lqp] broadcast
+        m = jnp.max(s, axis=1, keepdims=True)
+        p = jnp.exp(s - m)
+        m_scr[...] = m
+        l_scr[...] = jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = jax.lax.dot_general(
+            p, vq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    k0 = ik * block_k
+
+    @pl.when(dlen_ref[b] > k0)                         # doc tile beyond length
+    def _doc_tile():
+        q = q_ref[0, 0].astype(jnp.float32)
+        kd = kd_ref[0, 0].astype(jnp.float32)          # [bk, D]
+        vd = vd_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kd, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (k_pos < dlen_ref[b]) & (dval_ref[...] > 0)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, vd, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def join_attention_pallas(q, kq, vq, kd, vd, dlen, kq_valid, kd_valid, *,
+                          block_q: int, block_k: int, interpret: bool):
+    """q: [B, Hq, Sq, D]; kq, vq: [B, Hkv, Lq, D]; kd, vd: [B, Hkv, Ld, D];
+    dlen: [B] i32 (doc-segment tile-skip bound, covering every valid doc
+    index); kq_valid: [B, Lq] i32; kd_valid: [B, Ld] i32.  Sq/Ld must be
+    multiples of block_q/block_k and Lq a sublane multiple (ops.py pads)."""
+    b, hq, sq, d = q.shape
+    hkv, lq = kq.shape[1], kq.shape[2]
+    ld = kd.shape[2]
+    assert sq % block_q == 0 and ld % block_k == 0
+    n_rep = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    kern = functools.partial(_join_kernel, block_k=block_k, scale=scale)
+    grid = (b, hq, sq // block_q, ld // block_k)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, d),
+                             lambda b, h, iq, ik, L: (b, h, iq, 0)),
+                pl.BlockSpec((1, 1, lq, d),
+                             lambda b, h, iq, ik, L: (b, h // n_rep, 0, 0)),
+                pl.BlockSpec((1, 1, lq, d),
+                             lambda b, h, iq, ik, L: (b, h // n_rep, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, d),
+                             lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, d),
+                             lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
+                pl.BlockSpec((1, lq), lambda b, h, iq, ik, L: (b, 0)),
+                pl.BlockSpec((1, block_k), lambda b, h, iq, ik, L: (b, ik)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, d),
+                                   lambda b, h, iq, ik, L: (b, h, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        interpret=interpret,
+    )(dlen, q, kq, vq, kd, vd, kq_valid, kd_valid)

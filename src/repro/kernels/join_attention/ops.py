@@ -1,0 +1,66 @@
+"""Public wrapper for split-KV join attention: pad-to-block, pick interpret
+mode off-TPU, jit."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.join_attention.kernel import join_attention_pallas
+from repro.kernels.masking import last_valid_lengths
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def join_flash_attention(q, kq, vq, kd, vd, kq_valid=None, kd_valid=None, *,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool | None = None):
+    """Attention of ``q`` over the union of two K/V segments, never
+    concatenated: the query-segment pair (``kq``/``vq`` — PreTTR's freshly
+    encoded query tokens, bounded by ``max_query_len``) and the doc-segment
+    pair (``kd``/``vd`` — index-loaded term reps / stored layer-``l``
+    streams).
+
+    q: [B, Hq, Sq, D] (Sq may be the query segment, the doc segment, or a
+    single CLS row); kq, vq: [B, Hkv, Lq, D]; kd, vd: [B, Hkv, Ld, D];
+    kq_valid / kd_valid: optional [B, Lq] / [B, Ld] boolean key-validity
+    masks (non-prefix layouts supported).  Bidirectional, validity-masked
+    only — the PreTTR join layers carry no causal/window/split structure.
+    Pads every sequence dim to tile multiples; pad tails are masked and
+    sliced off the output.  Returns [B, Hq, Sq, D].
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, hq, sq, d = q.shape
+    lq, ld = kq.shape[2], kd.shape[2]
+    if kq_valid is None:
+        kq_valid = jnp.ones((b, lq), jnp.int32)
+    if kd_valid is None:
+        kd_valid = jnp.ones((b, ld), jnp.int32)
+    dlen = last_valid_lengths(kd_valid, ld)
+
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(8, ld))
+    pad_q = (-sq) % bq
+    pad_lq = max(8, -(-lq // 8) * 8) - lq   # whole-block q segment: 8-mult
+    pad_d = (-ld) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_lq:
+        kq = jnp.pad(kq, ((0, 0), (0, 0), (0, pad_lq), (0, 0)))
+        vq = jnp.pad(vq, ((0, 0), (0, 0), (0, pad_lq), (0, 0)))
+        kq_valid = jnp.pad(kq_valid.astype(jnp.int32), ((0, 0), (0, pad_lq)))
+    if pad_d:
+        kd = jnp.pad(kd, ((0, 0), (0, 0), (0, pad_d), (0, 0)))
+        vd = jnp.pad(vd, ((0, 0), (0, 0), (0, pad_d), (0, 0)))
+        kd_valid = jnp.pad(kd_valid.astype(jnp.int32), ((0, 0), (0, pad_d)))
+    out = join_attention_pallas(q, kq, vq, kd, vd, dlen.astype(jnp.int32),
+                                kq_valid.astype(jnp.int32),
+                                kd_valid.astype(jnp.int32),
+                                block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :, :sq]

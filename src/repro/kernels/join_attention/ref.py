@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for split-KV join attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def join_attention_ref(q, kq, vq, kd, vd, kq_valid=None, kd_valid=None):
+    """q: [B, Hq, Sq, D]; kq, vq: [B, Hkv, Lq, D]; kd, vd: [B, Hkv, Ld, D];
+    kq_valid / kd_valid: optional [B, Lq] / [B, Ld] booleans.
+    Returns [B, Hq, Sq, D] — softmax over the union of both segments."""
+    b, hq, sq, d = q.shape
+    hkv, lq = kq.shape[1], kq.shape[2]
+    ld = kd.shape[2]
+    n_rep = hq // hkv
+    k = jnp.repeat(jnp.concatenate([kq, kd], axis=2), n_rep, axis=1)
+    v = jnp.repeat(jnp.concatenate([vq, vd], axis=2), n_rep, axis=1)
+    if kq_valid is None:
+        kq_valid = jnp.ones((b, lq), bool)
+    if kd_valid is None:
+        kd_valid = jnp.ones((b, ld), bool)
+    valid = jnp.concatenate([kq_valid.astype(bool), kd_valid.astype(bool)],
+                            axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)

@@ -92,6 +92,11 @@ def main() -> None:
                          "--data-parallel)")
     ap.add_argument("--backend", default="blocked",
                     choices=["plain", "blocked", "pallas"])
+    ap.add_argument("--store-layer-kv", action="store_true",
+                    help="also precompute + store the join layer's doc-side "
+                         "K/V streams (layer_k/layer_v), letting the fused "
+                         "query-time join skip all doc-side projections at "
+                         "layer l")
     ap.add_argument("--distill-steps", type=int, default=0,
                     help="attention-MSE compressor distillation steps "
                          "before encoding (0 = keep the init compressor)")
@@ -129,7 +134,8 @@ def main() -> None:
     builder = IndexBuilder(args.out, cfg, params, codec=args.codec,
                            n_shards=args.shards, batch_size=args.batch,
                            mesh=mesh, writer_depth=args.writer_depth,
-                           backend=args.backend)
+                           backend=args.backend,
+                           store_layer_kv=args.store_layer_kv)
     report = builder.build(list(world.docs))
     print(f"[build_index] {report.n_docs} docs / {report.n_tokens} tokens "
           f"-> {args.out} ({report.n_shards} shards, codec={report.codec}) | "

@@ -64,6 +64,17 @@ def main() -> None:
                          "sequential Reranker loop")
     ap.add_argument("--concurrency", type=int, default=4,
                     help="--service: queries admitted per scheduling wave")
+    ap.add_argument("--store-layer-kv", action="store_true",
+                    help="store the join layer's doc-side K/V streams in "
+                         "the built index (fused join skips the layer-l "
+                         "doc projections)")
+    ap.add_argument("--doc-cache-mb", type=float, default=0.0,
+                    help="--service: device-resident hot-doc LRU cache "
+                         "budget in MiB (0 = off); cache hits skip index "
+                         "gather, H2D and codec decode")
+    ap.add_argument("--legacy-join", action="store_true",
+                    help="--service: score through the legacy concat join "
+                         "instead of the fused split-KV path")
     args = ap.parse_args()
 
     from repro.models.backend import impls_for
@@ -86,7 +97,8 @@ def main() -> None:
         builder = IndexBuilder(args.index_dir, cfg, params,
                                codec=args.codec, n_shards=args.shards,
                                batch_size=args.index_batch,
-                               backend=args.backend)
+                               backend=args.backend,
+                               store_layer_kv=args.store_layer_kv)
         report = builder.build(list(world.docs))
         idx = TermRepIndex.open(args.index_dir)
         e = cfg.compress_dim or cfg.backbone.d_model
@@ -100,7 +112,9 @@ def main() -> None:
 
     # ---- phase 2: serve -----------------------------------------------------
     if args.service:
-        svc = RankingService(params, cfg, idx, micro_batch=args.micro_batch)
+        svc = RankingService(params, cfg, idx, micro_batch=args.micro_batch,
+                             fused=not args.legacy_join,
+                             doc_cache_mb=args.doc_cache_mb)
         # warm the jit caches (encode + the packed join shape) off the clock
         q0, qv0 = pack_query(world.queries[0], cfg.max_query_len)
         svc.rank(q0, qv0, list(world.candidates(0, k=args.candidates)),
@@ -122,11 +136,15 @@ def main() -> None:
         wall = time.perf_counter() - t0
         p50, p99 = np.percentile(lat_s, [50, 99])
         s = svc.stats
+        cache_note = (f" doc_cache_hit={s.doc_cache_hit_rate:.2f}"
+                      if svc.doc_cache is not None else "")
         print(f"[serve] service mode: {len(lat_s)} queries x "
               f"{args.candidates} candidates, concurrency={args.concurrency}"
               f" | QPS={len(lat_s)/wall:.2f} p50={p50*1e3:.1f}ms "
               f"p99={p99*1e3:.1f}ms | batches={s.n_batches} "
-              f"pack_fill={s.pack_fill:.2f} | P@20={np.mean(p20):.3f}")
+              f"pack_fill={s.pack_fill:.2f} "
+              f"join_dispatch={s.n_join_dispatch}{cache_note} | "
+              f"P@20={np.mean(p20):.3f}")
         return
 
     rr = Reranker(params, cfg, idx, micro_batch=args.micro_batch)

@@ -25,6 +25,15 @@ Kinds and their call contracts (all arrays in **model layout**):
   lengths, static_window)`` — q ``[B, 1, Hq, D]``; k, v ``[B, S, Hkv, D]``.
   One query row against a full K/V sequence: the transformer decode step
   and the PreTTR CLS-only final layer (paper §6.3).
+* ``join_attention(q, kq, vq, kd, vd, *, cfg, scale, q_valid, kq_valid,
+  kd_valid)`` — q ``[B, Sq, Hq, D]``; kq, vq ``[B, Lq, Hkv, D]`` (the
+  freshly-encoded query segment); kd, vd ``[B, Ld, Hkv, D]`` (index-loaded
+  doc segment).  Attention over the *union* of the two K/V segments —
+  PreTTR's query-time join layers (``l..n-1``), which are bidirectional
+  and validity-masked only.  The reference impls concatenate the segments
+  and reuse the regular attention cores (so the fused join path stays
+  bit-exact with the legacy concat path); the ``pallas`` impl is the
+  split-KV flash kernel, which never materializes the concatenation.
 * ``compress(params, x, *, store_dtype)`` / ``decompress(params, r, *,
   compute_dtype)`` — the paper's d->e->d bottleneck (§4.2).
 
@@ -60,10 +69,12 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention import flash_decode_attention
 from repro.kernels.fused_compress import fused_compress, fused_decompress
+from repro.kernels.join_attention import join_flash_attention
 from repro.kernels.split_attention import split_flash_attention
 from repro.models import layers as L
 
-KINDS = ("attention", "decode_attention", "compress", "decompress")
+KINDS = ("attention", "decode_attention", "join_attention", "compress",
+         "decompress")
 
 _REGISTRY: dict[str, dict[str, Callable]] = {k: {} for k in KINDS}
 
@@ -140,7 +151,8 @@ def validate_config(attn_impl: str, compress_impl: str) -> None:
     registries must know the name — a half-registered extension would
     otherwise fail deep inside a jit trace."""
     for kind, name in (("attention", attn_impl),
-                       ("decode_attention", attn_impl)):
+                       ("decode_attention", attn_impl),
+                       ("join_attention", attn_impl)):
         if name not in _REGISTRY[kind]:
             raise ValueError(
                 f"unknown attn_impl {name!r} (no {kind} registration); "
@@ -229,6 +241,82 @@ def _decode_pallas(q, k, v, *, cfg, scale, q_pos, k_pos, window, k_valid=None,
     vt = v.transpose(0, 2, 1, 3)
     out = flash_decode_attention(qt, kt, vt, lengths, k_valid=k_valid,
                                  window=int(static_window))
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# join_attention: split-KV attention over (query segment, doc segment) —
+# PreTTR's query-time join layers (bidirectional, validity-masked only)
+# ---------------------------------------------------------------------------
+
+
+def _concat_join_operands(q, kq, vq, kd, vd, kq_valid, kd_valid):
+    b = q.shape[0]
+    k = jnp.concatenate([kq, kd], axis=1)
+    v = jnp.concatenate([vq, vd], axis=1)
+    if kq_valid is None:
+        kq_valid = jnp.ones((b, kq.shape[1]), bool)
+    if kd_valid is None:
+        kd_valid = jnp.ones((b, kd.shape[1]), bool)
+    k_valid = jnp.concatenate([kq_valid.astype(bool),
+                               kd_valid.astype(bool)], axis=1)
+    return k, v, k_valid
+
+
+def _join_decode_row(q, k, v, k_valid, *, scale):
+    """Single-row join (the CLS-only final layer) through the decode core —
+    the same reference the legacy path's ``decode_attention`` dispatch
+    runs, so fused-vs-concat stays bit-exact for the last layer too."""
+    b = q.shape[0]
+    q_pos = jnp.full((b, 1), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(k.shape[1]), (b, k.shape[1]))
+    return L.decode_attention(q, k, v, scale=scale, k_pos=k_pos, q_pos=q_pos,
+                              window=-1, k_valid=k_valid)
+
+
+@register("join_attention", "plain")
+def _join_plain(q, kq, vq, kd, vd, *, cfg, scale, q_valid=None,
+                kq_valid=None, kd_valid=None):
+    # reference semantics == the legacy concat path: concatenate the K/V
+    # segments (bitwise-neutral) and run the same plain core on the same
+    # shapes, so fused-vs-concat stays bit-exact under this impl
+    b, sq = q.shape[0], q.shape[1]
+    k, v, k_valid = _concat_join_operands(q, kq, vq, kd, vd,
+                                          kq_valid, kd_valid)
+    if sq == 1:
+        return _join_decode_row(q, k, v, k_valid, scale=scale)
+    mask = jnp.broadcast_to(k_valid[:, None, :], (b, sq, k.shape[1]))
+    if q_valid is not None:
+        mask = mask & q_valid[:, :, None]
+    return L.plain_attention(q, k, v, mask[:, None], scale=scale)
+
+
+@register("join_attention", "blocked")
+def _join_blocked(q, kq, vq, kd, vd, *, cfg, scale, q_valid=None,
+                  kq_valid=None, kd_valid=None):
+    del q_valid                       # parity with the blocked legacy impl
+    b, sq = q.shape[0], q.shape[1]
+    k, v, k_valid = _concat_join_operands(q, kq, vq, kd, vd,
+                                          kq_valid, kd_valid)
+    if sq == 1:                       # "blocked" decode == the jnp reference
+        return _join_decode_row(q, k, v, k_valid, scale=scale)
+    # positions only feed the (disabled) causal/window mask terms
+    q_pos = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    k_pos = jnp.broadcast_to(jnp.arange(k.shape[1]), (b, k.shape[1]))
+    return L.blocked_attention(
+        q, k, v, scale=scale, block_kv=cfg.block_kv, q_pos=q_pos,
+        k_pos=k_pos, causal=False, window=-1, k_valid=k_valid)
+
+
+@register("join_attention", "pallas")
+def _join_pallas(q, kq, vq, kd, vd, *, cfg, scale, q_valid=None,
+                 kq_valid=None, kd_valid=None):
+    del scale, q_valid                # kernel derives scale; rows w/o valid
+    qt = q.transpose(0, 2, 1, 3)      # keys behave as in split_attention
+    out = join_flash_attention(
+        qt, kq.transpose(0, 2, 1, 3), vq.transpose(0, 2, 1, 3),
+        kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3),
+        kq_valid=kq_valid, kd_valid=kd_valid)
     return out.transpose(0, 2, 1, 3)
 
 

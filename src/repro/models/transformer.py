@@ -216,6 +216,47 @@ def init_params(key, cfg: TransformerConfig):
 # ---------------------------------------------------------------------------
 
 
+def project_q(p, x, cfg: TransformerConfig, *, positions, rope_base=None):
+    """Q projection in model layout ``[B, S, Hq, Dh]`` (bias + qk-norm +
+    RoPE applied exactly as inside an attention block)."""
+    b, s, _ = x.shape
+    dh = cfg.dh
+    cd = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(b, s, cfg.n_heads, dh)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd).reshape(cfg.n_heads, dh)
+    if cfg.use_qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+    if cfg.rope:
+        q = L.rope(q, positions,
+                   base=cfg.rope_base if rope_base is None else rope_base,
+                   fraction=cfg.rope_fraction)
+    return q
+
+
+def project_kv(p, x, cfg: TransformerConfig, *, positions, rope_base=None):
+    """K/V projections in model layout ``[B, S, Hkv, Dh]`` — the
+    query-invariant half of an attention block.  Shared by ``_attention``
+    and PreTTR's index-time layer-``l`` doc K/V precompute
+    (``repro.core.prettr.precompute_doc_kv``), so the stored streams are
+    computed by the exact ops the query-time join would run."""
+    b, s, _ = x.shape
+    dh = cfg.dh
+    cd = cfg.compute_dtype
+    k = (x @ p["wk"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(cd).reshape(cfg.n_kv_heads, dh)
+        v = v + p["bv"].astype(cd).reshape(cfg.n_kv_heads, dh)
+    if cfg.use_qk_norm:
+        k = L.rms_norm(k, p["k_norm"])
+    if cfg.rope:
+        k = L.rope(k, positions,
+                   base=cfg.rope_base if rope_base is None else rope_base,
+                   fraction=cfg.rope_fraction)
+    return k, v
+
+
 def _attention(p, x, cfg: TransformerConfig, *, positions, window, rope_base,
                split_flag, segs, valid, seg_boundary=-1, static_window=None,
                static_split=None, cache=None, cache_pos=None):
@@ -227,19 +268,8 @@ def _attention(p, x, cfg: TransformerConfig, *, positions, window, rope_base,
     dh = cfg.dh
     cd = cfg.compute_dtype
 
-    q = (x @ p["wq"].astype(cd)).reshape(b, s, cfg.n_heads, dh)
-    k = (x @ p["wk"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
-    v = (x @ p["wv"].astype(cd)).reshape(b, s, cfg.n_kv_heads, dh)
-    if cfg.qkv_bias:
-        q = q + p["bq"].astype(cd).reshape(cfg.n_heads, dh)
-        k = k + p["bk"].astype(cd).reshape(cfg.n_kv_heads, dh)
-        v = v + p["bv"].astype(cd).reshape(cfg.n_kv_heads, dh)
-    if cfg.use_qk_norm:
-        q = L.rms_norm(q, p["q_norm"])
-        k = L.rms_norm(k, p["k_norm"])
-    if cfg.rope:
-        q = L.rope(q, positions, base=rope_base, fraction=cfg.rope_fraction)
-        k = L.rope(k, positions, base=rope_base, fraction=cfg.rope_fraction)
+    q = project_q(p, x, cfg, positions=positions, rope_base=rope_base)
+    k, v = project_kv(p, x, cfg, positions=positions, rope_base=rope_base)
     scale = 1.0 / math.sqrt(dh)
 
     new_cache = None
@@ -264,19 +294,13 @@ def _attention(p, x, cfg: TransformerConfig, *, positions, window, rope_base,
     return (proj, (k, v)) if cache is None else (proj, new_cache)
 
 
-def _layer_step(lp, x, cfg: TransformerConfig, *, positions, window, rope_base,
-                split_flag, segs, valid, seg_boundary=-1, static_window=None,
-                static_split=None, cache=None, cache_pos=None):
-    """Full transformer block. Returns (x, kv, aux_loss)."""
+def block_tail(lp, cfg: TransformerConfig, x, attn_out):
+    """Everything after attention in a transformer block — post-norms,
+    residuals, MLP/MoE.  Returns (x, aux_loss).  The single definition of
+    the block tail, shared by ``_layer_step`` and PreTTR's split-residual
+    join layer (whose fused/legacy bit-exactness depends on them running
+    identical ops)."""
     cd = cfg.compute_dtype
-    h = L.apply_norm(lp["ln1"], x, cfg.norm)
-    attn_out, kv = _attention(lp["attn"], h, cfg, positions=positions,
-                              window=window, rope_base=rope_base,
-                              split_flag=split_flag, segs=segs, valid=valid,
-                              seg_boundary=seg_boundary,
-                              static_window=static_window,
-                              static_split=static_split,
-                              cache=cache, cache_pos=cache_pos)
     if cfg.use_post_norm:
         attn_out = L.apply_norm(lp["ln1_post"], attn_out, cfg.norm)
     x = x + attn_out
@@ -294,7 +318,23 @@ def _layer_step(lp, x, cfg: TransformerConfig, *, positions, window, rope_base,
         ff = L.mlp(mlp_p, h, gated=cfg.gated_mlp, activation=cfg.activation)
     if cfg.use_post_norm:
         ff = L.apply_norm(lp["ln2_post"], ff, cfg.norm)
-    return x + ff, kv, aux
+    return x + ff, aux
+
+
+def _layer_step(lp, x, cfg: TransformerConfig, *, positions, window, rope_base,
+                split_flag, segs, valid, seg_boundary=-1, static_window=None,
+                static_split=None, cache=None, cache_pos=None):
+    """Full transformer block. Returns (x, kv, aux_loss)."""
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    attn_out, kv = _attention(lp["attn"], h, cfg, positions=positions,
+                              window=window, rope_base=rope_base,
+                              split_flag=split_flag, segs=segs, valid=valid,
+                              seg_boundary=seg_boundary,
+                              static_window=static_window,
+                              static_split=static_split,
+                              cache=cache, cache_pos=cache_pos)
+    x, aux = block_tail(lp, cfg, x, attn_out)
+    return x, kv, aux
 
 
 # ---------------------------------------------------------------------------

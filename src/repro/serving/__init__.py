@@ -1,4 +1,5 @@
 """Query-time serving: the RankingService API and the legacy Reranker."""
+from repro.serving.doc_cache import DeviceDocCache
 from repro.serving.reranker import Reranker
 from repro.serving.service import (DeadlinePriorityPolicy, RankingService,
                                    RankRequest, RankResponse, RerankStats,
@@ -7,4 +8,4 @@ from repro.serving.service import (DeadlinePriorityPolicy, RankingService,
 
 __all__ = ["RankingService", "RankRequest", "RankResponse", "RerankStats",
            "SchedulerPolicy", "DeadlinePriorityPolicy", "ServiceStats",
-           "Reranker", "validate_index_compat"]
+           "Reranker", "DeviceDocCache", "validate_index_compat"]

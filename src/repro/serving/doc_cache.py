@@ -1,0 +1,182 @@
+"""Device-resident hot-doc cache for the RankingService.
+
+SDR's observation (Cohen et al.): serving cost is dominated by *moving*
+document representations, not scoring them.  Under a skewed (zipf-ish)
+candidate stream the same hot documents are re-gathered from the index
+memmaps, re-shipped over H2D, and re-decoded on every request.  This cache
+keeps the fully-staged per-doc join inputs — codec-decoded term reps and,
+when the index stores them, the layer-``l`` K/V streams — resident on the
+device, so cache-hit candidates skip ``gather()``, the H2D copy, *and* the
+codec decode entirely; the prefetcher only stages misses.
+
+Design: a **slot pool**, not per-doc arrays.  Each stream is one
+preallocated device tensor ``[capacity, Ld, ...]``; an LRU map assigns doc
+ids to slots.  Batch assembly is then a single device gather
+(``pool[slots]``) and miss insertion a single scatter (``pool.at[slots]
+.set(rows)``) — O(1) dispatches per micro-batch regardless of hit pattern,
+which is what keeps the one-jit-entry-per-batch property of the scheduler
+intact (tests/test_join_attention.py guards the dispatch count).
+
+Concurrency contract: :meth:`plan` (host bookkeeping: LRU bump, slot
+assignment, eviction) may run in the prefetch thread; :meth:`insert` /
+:meth:`take` (the device ops) must run on the scoring thread in batch
+order.  Reassigning an evicted slot is safe because the slot's bytes are
+only overwritten by a later ``insert`` — every batch's ``take`` happens
+before any later batch's ``insert``.  ``plan`` never evicts a doc of the
+batch it is planning (those ids are pinned), which the
+``capacity >= 2 * micro_batch`` constructor check guarantees is always
+possible.
+
+Scores are identical hit-vs-miss by construction: every row — fresh miss
+or warm hit — is assembled through the same ``pool[slots]`` gather of the
+same decoded bytes, so the scoring jit sees bit-identical inputs.
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _scatter(pool, slots, rows):
+    return pool.at[slots].set(rows)
+
+
+@jax.jit
+def _take(pool, slots):
+    return pool[slots]
+
+
+class DeviceDocCache:
+    """Pooled device-resident LRU over staged per-doc join inputs.
+
+    ``capacity_bytes`` bounds device memory; the slot count is derived
+    from the per-doc footprint (``doc_len`` tokens of ``rep_dim`` decoded
+    reps plus, when ``kv_dim > 0``, two ``kv_dim``-wide K/V rows).
+    """
+
+    def __init__(self, capacity_bytes: int, *, doc_len: int, rep_dim: int,
+                 rep_dtype, kv_dim: int = 0, kv_dtype=None,
+                 min_slots: int = 2):
+        rep_dtype = np.dtype(rep_dtype)
+        kv_dtype = np.dtype(kv_dtype) if kv_dim else None
+        entry = doc_len * rep_dim * rep_dtype.itemsize + doc_len  # + valid
+        if kv_dim:
+            entry += 2 * doc_len * kv_dim * kv_dtype.itemsize
+        self.entry_bytes = entry
+        self.capacity = int(capacity_bytes) // entry
+        if self.capacity < min_slots:
+            raise ValueError(
+                f"doc cache of {capacity_bytes} bytes holds only "
+                f"{self.capacity} docs ({entry} B/doc) but the scheduler "
+                f"needs at least {min_slots} slots (2 * micro_batch) to "
+                f"pin an in-flight batch; raise doc_cache_mb to >= "
+                f"{min_slots * entry / 2**20:.1f} MiB or shrink micro_batch")
+        self._reps = jnp.zeros((self.capacity, doc_len, rep_dim), rep_dtype)
+        self._k = self._v = None
+        if kv_dim:
+            self._k = jnp.zeros((self.capacity, doc_len, kv_dim), kv_dtype)
+            self._v = jnp.zeros((self.capacity, doc_len, kv_dim), kv_dtype)
+        self._valid = np.zeros((self.capacity, doc_len), bool)
+        self._slot_of: OrderedDict[int, int] = OrderedDict()  # LRU order
+        self._free = list(range(self.capacity))
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self):
+        return len(self._slot_of)
+
+    @property
+    def resident_bytes(self) -> int:
+        return len(self._slot_of) * self.entry_bytes
+
+    # -- host bookkeeping (prefetch-thread safe) ------------------------------
+    def plan(self, doc_ids, n_real: int | None = None):
+        """Assign every id a slot, evicting cold docs for the misses.
+
+        Returns ``(row_slots, miss_ids, miss_slots)``: ``row_slots[i]`` is
+        the pool slot of ``doc_ids[i]``; ``miss_ids``/``miss_slots`` are
+        the (unique, insertion-ordered) docs the caller must stage and
+        :meth:`insert` before :meth:`take`-ing ``row_slots``.
+
+        ``n_real`` bounds the hit/miss counters to the first ``n_real``
+        rows — micro-batch shape padding (replicated trailing rows) still
+        gets slots but must not inflate the hit rate."""
+        if n_real is None:
+            n_real = len(doc_ids)
+        pinned = set(doc_ids)
+        cached_before = set(self._slot_of)
+        miss_ids: list[int] = []
+        miss_slots: list[int] = []
+        row_slots: list[int] = []
+        for i, d in enumerate(doc_ids):
+            d = int(d)
+            slot = self._slot_of.get(d)
+            if slot is None:
+                if self._free:
+                    slot = self._free.pop()
+                else:
+                    victim = next(c for c in self._slot_of if c not in pinned)
+                    slot = self._slot_of.pop(victim)
+                    self.evictions += 1
+                self._slot_of[d] = slot
+                miss_ids.append(d)
+                miss_slots.append(slot)
+            else:
+                self._slot_of.move_to_end(d)
+            if i < n_real:
+                if d in cached_before:
+                    self.hits += 1
+                else:
+                    self.misses += 1
+            row_slots.append(slot)
+        return row_slots, miss_ids, miss_slots
+
+    @staticmethod
+    def bucket(n: int, cap: int) -> int:
+        """Pad count for the miss batch: next power of two, capped at the
+        micro-batch — keeps the decode/scatter jit entries to O(log cap)
+        shapes."""
+        b = 1
+        while b < n:
+            b *= 2
+        return max(n, min(b, cap))
+
+    # -- device ops (scoring thread, batch order) -----------------------------
+    def insert(self, miss_slots, reps, valid, k=None, v=None):
+        """Scatter staged miss rows into the pools.  ``miss_slots`` may be
+        bucket-padded with repeats of the last slot (same value rows)."""
+        slots = jnp.asarray(np.asarray(miss_slots, np.int32))
+        self._reps = _scatter(self._reps, slots, reps.astype(self._reps.dtype))
+        if self._k is not None:
+            self._k = _scatter(self._k, slots, k.astype(self._k.dtype))
+            self._v = _scatter(self._v, slots, v.astype(self._v.dtype))
+        self._valid[np.asarray(miss_slots, np.int64)] = np.asarray(valid)
+
+    def take(self, row_slots):
+        """One device gather per pool -> ``(reps, valid_np, k, v)`` for a
+        planned batch (``k``/``v`` are None without stored KV streams).
+
+        The serving hot path skips this and indexes the :attr:`pools`
+        directly *inside* its scoring jit (one dispatch gathers and
+        scores); ``take`` is the standalone accessor for tests/tools."""
+        slots = jnp.asarray(np.asarray(row_slots, np.int32))
+        reps = _take(self._reps, slots)
+        k = _take(self._k, slots) if self._k is not None else None
+        v = _take(self._v, slots) if self._v is not None else None
+        return reps, self.valid_rows(row_slots), k, v
+
+    @property
+    def pools(self):
+        """The device pool arrays ``(reps, k, v)`` (k/v None without
+        stored KV) — index with a slot vector inside a jit to fuse batch
+        assembly into downstream compute."""
+        return self._reps, self._k, self._v
+
+    def valid_rows(self, row_slots) -> np.ndarray:
+        return self._valid[np.asarray(row_slots, np.int64)]

@@ -102,6 +102,10 @@ class ServiceStats:
     n_rows: int = 0                       # real candidate rows scored
     n_pad_rows: int = 0                   # shape-padding rows
     n_redispatch: int = 0
+    n_join_dispatch: int = 0              # scoring jit entries issued
+    n_decode_dispatch: int = 0            # on-device codec-decode dispatches
+    n_doc_cache_hit: int = 0              # candidate rows served from device
+    n_doc_cache_miss: int = 0             # candidate rows staged from disk
     query_encode_s: float = 0.0
     load_s: float = 0.0
     combine_s: float = 0.0
@@ -112,6 +116,11 @@ class ServiceStats:
     def pack_fill(self) -> float:
         """Fraction of scored batch rows that were real candidates."""
         return self.n_rows / max(1, self.n_rows + self.n_pad_rows)
+
+    @property
+    def doc_cache_hit_rate(self) -> float:
+        seen = self.n_doc_cache_hit + self.n_doc_cache_miss
+        return self.n_doc_cache_hit / max(1, seen)
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +233,13 @@ def validate_index_compat(cfg: P.PreTTRConfig, index: TermRepIndex) -> None:
         raise ValueError(
             f"index was precomputed through l={index.l} layers but the "
             f"config joins at l={cfg.l}; re-index or change the config")
+    if getattr(index, "has_layer_kv", False):
+        want = cfg.backbone.n_kv_heads * cfg.backbone.dh
+        if index.kv_dim != want:
+            raise ValueError(
+                f"index stores layer-l K/V streams of width "
+                f"{index.kv_dim} but the config's K/V width is {want} "
+                f"(n_kv_heads * head_dim); re-index or change the config")
     # indexes built without an explicit max_doc_len record 0 — fall back to
     # the longest stored document so truncation still cannot slip through
     lengths = index.doc_lengths
@@ -263,6 +279,16 @@ class RankingService:
     ``"pallas"`` for the flash/fused kernels) exactly as on ``Reranker``.
     ``encode_fn`` / ``join_fn`` override the jitted model entry points
     (used by the ``Reranker`` shim so patched-in test doubles stay live).
+
+    ``fused`` selects the join execution path (default: the fused
+    split-KV path; ``False`` = legacy concat).  ``use_layer_kv`` consumes
+    the index's stored layer-``l`` doc K/V streams in the join (default:
+    automatically on when the index has them and the fused path is
+    active).  ``doc_cache_mb`` > 0 enables the **device-resident hot-doc
+    LRU cache** (``repro.serving.doc_cache``): cache-hit candidates skip
+    index ``gather()``, H2D copy and codec decode entirely, and the
+    prefetcher stages only the misses — scores are bit-identical
+    hit-vs-miss because every row is assembled from the same device pool.
     """
 
     def __init__(self, params, cfg: P.PreTTRConfig, index: TermRepIndex, *,
@@ -271,7 +297,9 @@ class RankingService:
                  prefetch_depth: int = 2, deadline_s: float | None = None,
                  encode_fn: Callable | None = None,
                  join_fn: Callable | None = None,
-                 validate_index: bool = True):
+                 validate_index: bool = True, fused: bool = True,
+                 use_layer_kv: bool | None = None,
+                 doc_cache_mb: float = 0.0):
         if backend is not None:
             from repro.models.backend import apply_backend
             cfg = apply_backend(cfg, backend)
@@ -286,10 +314,32 @@ class RankingService:
         self.default_deadline_s = deadline_s
         self.stats = ServiceStats()
 
+        self.fused = bool(fused)
+        has_kv = bool(getattr(index, "has_layer_kv", False))
+        if use_layer_kv is None:
+            # stored K/V only plug into the fused path, and an injected
+            # join_fn (the Reranker shim) has the 5-arg signature
+            use_layer_kv = has_kv and self.fused and join_fn is None
+        if use_layer_kv and not has_kv:
+            raise ValueError(
+                "use_layer_kv=True but the index has no layer_k/layer_v "
+                "streams; rebuild it with IndexBuilder(store_layer_kv=True)")
+        if use_layer_kv and not self.fused:
+            raise ValueError(
+                "stored layer-l K/V streams require the fused join path "
+                "(fused=True)")
+        self.use_layer_kv = bool(use_layer_kv)
+
         self._encode = encode_fn or jax.jit(
             lambda p, t, v: P.encode_query(p, cfg, t, v))
         self._join = join_fn or jax.jit(
-            lambda p, qr, qv, st, dv: P.join_and_score(p, cfg, qr, qv, st, dv))
+            lambda p, qr, qv, st, dv: P.join_and_score(p, cfg, qr, qv, st,
+                                                       dv, fused=fused))
+        self._join_kv = None
+        if self.use_layer_kv:
+            self._join_kv = jax.jit(
+                lambda p, qr, qv, st, dv, kl, vl: P.join_and_score(
+                    p, cfg, qr, qv, st, dv, doc_kv=(kl, vl), fused=True))
         # codec-aware staging: quantizing codecs (int8) ship their narrow
         # raw streams over H2D and decode on device, just before the join;
         # identity codecs (fp16/fp32) feed stored bytes straight through
@@ -297,6 +347,48 @@ class RankingService:
         self._decode = None
         if codec is not None and not codec.decode_is_identity:
             self._decode = jax.jit(codec.decode)
+        # stream subset to stage: skip the (large) K/V streams of an index
+        # that has them when this service doesn't consume them
+        self._gather_streams = None
+        if has_kv and not self.use_layer_kv and codec is not None:
+            self._gather_streams = list(codec.streams(index.rep_dim))
+
+        self._doc_cache = None
+        if doc_cache_mb and doc_cache_mb > 0:
+            if join_fn is not None:
+                raise ValueError(
+                    "doc_cache_mb scores through a pool-fused jit of the "
+                    "model's join_and_score; an injected join_fn would be "
+                    "silently bypassed — disable the doc cache or drop "
+                    "join_fn")
+            if getattr(index, "gather_raw", None) is None or codec is None:
+                raise ValueError(
+                    "doc_cache_mb needs a codec-aware TermRepIndex "
+                    "(gather_raw); this index stand-in has none")
+            from repro.serving.doc_cache import DeviceDocCache
+            rep_dt, _ = codec.streams(index.rep_dim)["reps"]
+            if not codec.decode_is_identity:
+                rep_dt = np.dtype(np.float32)     # decoded on device
+            kv_dt = (np.dtype(index.layer_kv["dtype"])
+                     if self.use_layer_kv else None)
+            self._doc_cache = DeviceDocCache(
+                int(doc_cache_mb * 2**20), doc_len=cfg.max_doc_len,
+                rep_dim=index.rep_dim, rep_dtype=rep_dt,
+                kv_dim=index.kv_dim if self.use_layer_kv else 0,
+                kv_dtype=kv_dt, min_slots=2 * self.micro_batch)
+            # pool-fused scoring: the slot gather happens *inside* the jit,
+            # so batch assembly + join is one dispatch per micro-batch
+            if self.use_layer_kv:
+                self._join_pool = jax.jit(
+                    lambda p, qr, qv, reps, kp, vp, slots, dv:
+                    P.join_and_score(p, cfg, qr, qv, reps[slots], dv,
+                                     doc_kv=(kp[slots], vp[slots]),
+                                     fused=True))
+            else:
+                self._join_pool = jax.jit(
+                    lambda p, qr, qv, reps, slots, dv:
+                    P.join_and_score(p, cfg, qr, qv, reps[slots], dv,
+                                     fused=fused))
 
         self._qcache: OrderedDict = OrderedDict()
         self._cache_size = cache_size
@@ -309,6 +401,11 @@ class RankingService:
     def reset_stats(self) -> None:
         """Zero the aggregate counters (e.g. after a jit-warmup request)."""
         self.stats = ServiceStats()
+
+    @property
+    def doc_cache(self):
+        """The device-resident hot-doc cache (None when disabled)."""
+        return self._doc_cache
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: RankRequest) -> str:
@@ -403,23 +500,62 @@ class RankingService:
         codec's raw streams — for int8 the narrow encoded payload, decoded
         on device), H2D copy, and per-row query-rep batch assembly (padding
         rows replicate the last real row; their scores are discarded).
-        -> (qr, qv, dparts, dval, load_dt)."""
+
+        With the hot-doc cache enabled, only the *misses* are gathered and
+        shipped (bucket-padded so the decode/insert jits see O(log B)
+        shapes); hit rows are just slot numbers into the device pool.
+        -> (qr, qv, payload, load_dt).  The clock stops only after
+        ``block_until_ready`` on everything staged — ``device_put`` is
+        async, and an unblocked timestamp silently books the H2D copy
+        under the next combine phase."""
         t0 = time.perf_counter()
-        gather_raw = getattr(self.index, "gather_raw", None)
-        if gather_raw is not None:
-            parts, dvalid = gather_raw(
-                [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
-        else:                              # index stand-ins without codecs
-            reps, dvalid = self.index.gather(
-                [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
-            parts = {"reps": reps}
-        dreps = jax.device_put(parts)
-        dval = jax.device_put(dvalid)
+        if self._doc_cache is not None:
+            payload = self._stage_cached(plan)
+        else:
+            gather_raw = getattr(self.index, "gather_raw", None)
+            if gather_raw is not None:
+                parts, dvalid = gather_raw(
+                    [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len,
+                    streams=self._gather_streams)
+            else:                          # index stand-ins without codecs
+                reps, dvalid = self.index.gather(
+                    [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
+                parts = {"reps": reps}
+            payload = {"parts": jax.device_put(parts),
+                       "valid": jax.device_put(dvalid)}
         last = next(s for s, _, _ in reversed(plan.rows) if s is not None)
         qr = jnp.concatenate(
             [(s or last).q_reps for s, _, _ in plan.rows], axis=0)
         qv = jnp.stack([(s or last).q_valid_j for s, _, _ in plan.rows])
-        return qr, qv, dreps, dval, time.perf_counter() - t0
+        jax.block_until_ready((qr, qv, payload))
+        return qr, qv, payload, time.perf_counter() - t0
+
+    def _stage_cached(self, plan: _Plan):
+        """Cache-aware staging: plan slots (LRU bump + miss admission) and
+        gather/ship only the miss rows."""
+        ids = [r[2] for r in plan.rows]
+        # hit/miss accounting over *real* candidate rows only — the
+        # micro-batch shape pads (state None, always trailing) would
+        # otherwise skew the hit rates (pack_fill already excludes them)
+        real_ids = [d for s, _, d in plan.rows if s is not None]
+        row_slots, miss_ids, miss_slots = self._doc_cache.plan(
+            ids, n_real=len(real_ids))
+        fresh = set(miss_ids)
+        n_miss_rows = sum(1 for d in real_ids if d in fresh)
+        payload = {"row_slots": row_slots, "miss_slots": [],
+                   "miss_parts": None, "miss_valid": None,
+                   "n_miss_rows": n_miss_rows, "n_rows": len(real_ids)}
+        if miss_ids:
+            bucket = self._doc_cache.bucket(len(miss_ids), self.micro_batch)
+            pad = bucket - len(miss_ids)
+            padded_ids = miss_ids + [miss_ids[-1]] * pad
+            payload["miss_slots"] = miss_slots + [miss_slots[-1]] * pad
+            parts, valid = self.index.gather_raw(
+                padded_ids, pad_to=self.cfg.max_doc_len,
+                streams=self._gather_streams)
+            payload["miss_parts"] = jax.device_put(parts)
+            payload["miss_valid"] = valid
+        return payload
 
     def _prefetch_loop(self, in_q: queue.Queue, out_q: queue.Queue):
         """Prefetch thread: stage the next planned batches while the device
@@ -431,7 +567,7 @@ class RankingService:
             try:
                 out_q.put((plan, *self._stage(plan), None))
             except Exception as e:                    # noqa: BLE001
-                out_q.put((plan, None, None, None, None, 0.0, e))
+                out_q.put((plan, None, None, None, 0.0, e))
 
     def drain(self) -> list[RankResponse]:
         """Run the scheduler until every queued request has a response.
@@ -470,11 +606,11 @@ class RankingService:
                     inflight += 1
                 if inflight == 0:
                     break
-                plan, qr, qv, dreps, dval, load_dt, err = out_q.get()
+                plan, qr, qv, payload, load_dt, err = out_q.get()
                 inflight -= 1
                 if err is not None:
                     raise err
-                self._score_plan(plan, qr, qv, dreps, dval, load_dt, done)
+                self._score_plan(plan, qr, qv, payload, load_dt, done)
         finally:
             in_q.put(_STOP)
             # unblock a worker stuck on a full out_q before joining
@@ -488,13 +624,53 @@ class RankingService:
         return done
 
     # -- device step ---------------------------------------------------------
-    def _score_plan(self, plan: _Plan, qr, qv, dparts, dval, load_dt: float,
+    def _score_batch(self, qr, qv, payload):
+        """Assemble the doc-side operands and issue exactly one scoring jit
+        entry.  Cache mode: insert staged misses into the device pool, then
+        gather every row from it (hit and miss rows take the identical
+        compute path, so scores are bit-equal either way)."""
+        if self._doc_cache is not None:
+            mp = payload["miss_parts"]
+            if mp is not None:
+                if self._decode:
+                    rows = self._decode(mp)
+                    self.stats.n_decode_dispatch += 1
+                else:
+                    rows = mp["reps"]
+                self._doc_cache.insert(
+                    payload["miss_slots"], rows, payload["miss_valid"],
+                    k=mp.get("layer_k"), v=mp.get("layer_v"))
+            self.stats.n_doc_cache_miss += payload["n_miss_rows"]
+            self.stats.n_doc_cache_hit += (payload["n_rows"]
+                                           - payload["n_miss_rows"])
+            slots = jnp.asarray(np.asarray(payload["row_slots"], np.int32))
+            dval = self._doc_cache.valid_rows(payload["row_slots"])
+            reps, kp, vp = self._doc_cache.pools
+            self.stats.n_join_dispatch += 1
+            if self.use_layer_kv:
+                return self._join_pool(self.params, qr, qv, reps, kp, vp,
+                                       slots, dval)
+            return self._join_pool(self.params, qr, qv, reps, slots, dval)
+        else:
+            dparts, dval = payload["parts"], payload["valid"]
+            if self._decode:
+                st = self._decode(dparts)
+                self.stats.n_decode_dispatch += 1
+            else:
+                st = dparts["reps"]
+            kl = dparts.get("layer_k") if self.use_layer_kv else None
+            vl = dparts.get("layer_v") if self.use_layer_kv else None
+        self.stats.n_join_dispatch += 1
+        if kl is not None:
+            return self._join_kv(self.params, qr, qv, st, dval, kl, vl)
+        return self._join(self.params, qr, qv, st, dval)
+
+    def _score_plan(self, plan: _Plan, qr, qv, payload, load_dt: float,
                     done: list[RankResponse]):
         rows = plan.rows
         t0 = time.perf_counter()
-        st = self._decode(dparts) if self._decode else dparts["reps"]
         scores = np.asarray(jax.device_get(
-            self._join(self.params, qr, qv, st, dval)))
+            self._score_batch(qr, qv, payload)))
         dt = time.perf_counter() - t0
 
         states = [s for s, _, _ in rows if s is not None]
