@@ -99,17 +99,18 @@ def timer(fn, *args, reps: int = 5, warmup: int = 2):
     return (time.perf_counter() - t0) / reps
 
 
-# -- serving perf trajectory (BENCH_serving.json at the repo root) -----------
+# -- bench trajectories (BENCH_*.json at the repo root) ----------------------
 
-BENCH_SERVING_PATH = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "BENCH_serving.json")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_SERVING_PATH = os.path.join(REPO_ROOT, "BENCH_serving.json")
+BENCH_QUALITY_PATH = os.path.join(REPO_ROOT, "BENCH_quality.json")
 
 
 def assert_bench_schema(rows) -> None:
-    """The BENCH_serving.json contract future PRs diff against: a JSON
-    list of ``{"name": str, "value": finite number, "unit": str}`` rows
-    with unique names.  Raises on any violation — with real ``raise``
+    """The one schema every committed ``BENCH_*.json`` trajectory file
+    (serving perf *and* cascade quality) must satisfy: a JSON list of
+    ``{"name": str, "value": finite number, "unit": str}`` rows with
+    unique names.  Raises on any violation — with real ``raise``
     statements, not ``assert``, so the gate survives ``python -O``."""
     import math
     if not isinstance(rows, list) or not rows:
@@ -132,12 +133,32 @@ def assert_bench_schema(rows) -> None:
         raise AssertionError("duplicate bench row names")
 
 
-def write_bench_serving(rows, path: str | None = None) -> str:
-    """Validate + write the serving perf rows; returns the path."""
+def write_bench(rows, path: str) -> str:
+    """Validate + write one BENCH_*.json trajectory file; returns the
+    path.  All trajectory writers go through here so no malformed file
+    can be committed."""
     import json
     assert_bench_schema(rows)
-    path = path or BENCH_SERVING_PATH
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
         f.write("\n")
     return path
+
+
+def write_bench_serving(rows, path: str | None = None) -> str:
+    """Validate + write the serving perf rows; returns the path."""
+    return write_bench(rows, path or BENCH_SERVING_PATH)
+
+
+def write_bench_quality(rows, path: str | None = None) -> str:
+    """Validate + write the cascade quality rows; returns the path."""
+    return write_bench(rows, path or BENCH_QUALITY_PATH)
+
+
+def load_bench(path: str):
+    """Read + schema-validate one BENCH_*.json; returns its rows."""
+    import json
+    with open(path) as f:
+        rows = json.load(f)
+    assert_bench_schema(rows)
+    return rows

@@ -1,0 +1,194 @@
+"""The cascade quality trajectory: ``BENCH_quality.json`` at the repo root.
+
+Sweeps the retrieval cascade (``repro.eval.cascade``) over storage codec
+{fp32, fp16, int8} x join layer ``l`` on the seeded synthetic world — one
+trained ranker per ``l``, shared across codecs (codecs change stored
+bytes, never training) — and writes per-stage IR metrics through the same
+schema-asserting writer as ``BENCH_serving.json``.  This is the file every
+future codec / pruning / kernel PR diffs against for quality, the way
+``BENCH_serving.json`` is diffed for speed (PreTTR §6: the whole game is
+compression "without a substantial degradation in ranking performance").
+
+The CI quality leg re-runs this sweep (same seeds, same sizes) and calls
+:func:`check_quality_regression` against the committed file: any metric
+dropping more than ``--epsilon`` fails the build, and the fp32 rows —
+bit-deterministic under a fixed seed — must match exactly.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.quality                  # rewrite
+    PYTHONPATH=src python -m benchmarks.quality \\
+        --out /tmp/q.json --check-baseline BENCH_quality.json \\
+        --epsilon 0.02 --exact fp32                              # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import (BENCH_QUALITY_PATH, assert_bench_schema,
+                               load_bench, make_cfg, make_world,
+                               train_ranker, write_bench)
+
+QUALITY_LS = (1, 3)                      # >= 2 join depths (paper Table 3)
+QUALITY_CODECS = ("fp32", "fp16", "int8")
+QUALITY_K = 32                           # first-stage pool depth
+QUALITY_K_METRIC = 10
+QUALITY_SEED = 7                         # train seed (world seed: make_world)
+
+#: metric -> (unit, direction); +1 = higher is better, -1 = lower is better
+METRIC_SPEC = {
+    "mrr@10": ("score", +1), "hit@10": ("frac", +1),
+    "ndcg@10": ("score", +1), "recall@10": ("frac", +1),
+    "pool_recall": ("frac", +1), "mpr": ("frac", -1),
+}
+
+
+def _rows_for(res, prefix: str) -> list[dict]:
+    rows = []
+    for name, value in res.flat().items():
+        metric = name.split("/")[-1]
+        unit, _ = METRIC_SPEC.get(metric, ("score", +1))
+        rows.append({"name": f"{prefix}/{name}", "value": float(value),
+                     "unit": unit})
+    return rows
+
+
+def run_quality(steps: int = 40, ls=QUALITY_LS, codecs=QUALITY_CODECS,
+                k: int = QUALITY_K, k_metric: int = QUALITY_K_METRIC,
+                write_bench_file: bool = True, fast: bool = False,
+                out_path: str | None = None) -> list[dict]:
+    """Train one ranker per ``l``, evaluate the cascade per codec, and
+    return (+ optionally write) the ``{name, value, unit}`` rows.
+
+    ``fast`` shrinks the world and training for CI smokes of the *writer
+    path* — those numbers must never overwrite the committed trajectory,
+    so fast implies no write unless an explicit ``out_path`` is given."""
+    from repro.eval.cascade import run_cascade
+
+    if fast:
+        world = make_world(seed=3)
+        world = type(world)(n_docs=96, n_queries=8,
+                            vocab_size=world.vocab_size,
+                            doc_len=world.doc_len, seed=3)
+        ls, codecs, steps = ls[:1], codecs[:2], min(steps, 6)
+    else:
+        world = make_world()
+
+    rows = []
+    for l in ls:
+        cfg = make_cfg(l=l)
+        params, loss = train_ranker(cfg, world, steps=steps,
+                                    seed=QUALITY_SEED)
+        rows.append({"name": f"quality/l={l}/train_loss",
+                     "value": float(loss), "unit": "loss"})
+        for codec in codecs:
+            res = run_cascade(params, cfg, world, codec=codec, k=k,
+                              k_metric=k_metric)
+            rows += _rows_for(res, f"quality/l={l}/{codec}")
+            print(f"[quality] l={l} codec={codec}: "
+                  f"first mrr@{k_metric}="
+                  f"{res.first_stage[f'mrr@{k_metric}']:.3f} "
+                  f"pool_recall={res.first_stage['pool_recall']:.3f} | "
+                  f"rerank mrr@{k_metric}="
+                  f"{res.rerank[f'mrr@{k_metric}']:.3f} "
+                  f"ndcg@{k_metric}={res.rerank[f'ndcg@{k_metric}']:.3f} "
+                  f"mpr={res.rerank['mpr']:.3f}")
+    assert_bench_schema(rows)
+    if write_bench_file or out_path:
+        path = write_bench(rows, out_path or BENCH_QUALITY_PATH)
+        print(f"[quality] wrote {len(rows)} rows -> {path}")
+    return rows
+
+
+def check_quality_regression(rows, baseline_rows, *, epsilon: float = 0.02,
+                             exact_substrings=()) -> list[str]:
+    """Compare fresh quality rows against the committed baseline.
+
+    Returns a list of human-readable failures (empty = gate passes):
+
+    * a metric row worse than its baseline by more than ``epsilon`` in
+      its direction (``METRIC_SPEC``; ``mpr`` is lower-is-better) — a
+      quality *improvement* never fails, it just means the baseline
+      should be refreshed;
+    * any row whose name contains one of ``exact_substrings`` (CI passes
+      ``"/fp32/"``: seeded fp32 runs are bit-deterministic) differing at
+      all;
+    * row names present on one side only — schema drift must arrive with
+      a regenerated baseline, not slip through the diff.
+
+    ``train_loss`` rows are informational and never gate."""
+    new = {r["name"]: float(r["value"]) for r in rows}
+    base = {r["name"]: float(r["value"]) for r in baseline_rows}
+    failures = []
+    for name in sorted(base.keys() - new.keys()):
+        failures.append(f"baseline row {name!r} missing from this run "
+                        f"(regenerate the baseline if intentional)")
+    for name in sorted(new.keys() - base.keys()):
+        failures.append(f"new row {name!r} absent from the baseline "
+                        f"(regenerate the baseline to admit it)")
+    for name in sorted(new.keys() & base.keys()):
+        nv, bv = new[name], base[name]
+        if any(s in name for s in exact_substrings):
+            if nv != bv:
+                failures.append(
+                    f"{name}: {nv!r} != baseline {bv!r} (exact match "
+                    f"required for this row)")
+            continue
+        metric = name.split("/")[-1]
+        spec = METRIC_SPEC.get(metric)
+        if spec is None:                       # e.g. train_loss
+            continue
+        _, direction = spec
+        drop = (bv - nv) * direction
+        if drop > epsilon:
+            worse = "below" if direction > 0 else "above"
+            failures.append(
+                f"{name}: {nv:.4f} is {drop:.4f} {worse} baseline "
+                f"{bv:.4f} (epsilon {epsilon})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="cascade quality trajectory + CI regression gate")
+    ap.add_argument("--steps", type=int, default=40,
+                    help="ranker training steps per l")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny writer-path smoke; never touches the "
+                         "committed trajectory")
+    ap.add_argument("--out", default=None,
+                    help="write rows here instead of the repo-root "
+                         "BENCH_quality.json")
+    ap.add_argument("--no-write", action="store_true",
+                    help="compute + validate rows without writing any file")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="compare the fresh rows against this committed "
+                         "BENCH_quality.json; exit 1 on regression")
+    ap.add_argument("--epsilon", type=float, default=0.02,
+                    help="tolerated per-metric drop vs the baseline")
+    ap.add_argument("--exact", default=None, metavar="SUBSTR",
+                    help="rows whose name contains this substring must "
+                         "match the baseline exactly (CI uses 'fp32')")
+    args = ap.parse_args()
+
+    rows = run_quality(steps=args.steps, fast=args.fast,
+                       write_bench_file=not (args.no_write or args.fast),
+                       out_path=args.out)
+    if args.check_baseline:
+        exact = (f"/{args.exact}/",) if args.exact else ()
+        failures = check_quality_regression(
+            rows, load_bench(args.check_baseline),
+            epsilon=args.epsilon, exact_substrings=exact)
+        if failures:
+            print(f"[quality] REGRESSION vs {args.check_baseline}:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        print(f"[quality] gate passed vs {args.check_baseline} "
+              f"(epsilon={args.epsilon}"
+              + (f", exact on {args.exact}" if args.exact else "") + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,8 @@ def main() -> None:
         results["table3_quality_vs_l"] = rows
         for r in rows:
             print(f"table3/l={r['l']},{r['p20']:.4f},P@20")
+            print(f"table3/l={r['l']}/cascade_mrr10,"
+                  f"{r['rerank']['mrr@10']:.4f},MRR@10")
         print(f"table3/runtime,{time.time()-t0:.1f},seconds")
 
     if "table4" not in skip:
@@ -41,6 +43,8 @@ def main() -> None:
         results["table4_compression"] = rows
         for r in rows:
             print(f"table4/e={r['e']},{r['p20']:.4f},P@20")
+            print(f"table4/e={r['e']}/cascade_mrr10,"
+                  f"{r['rerank']['mrr@10']:.4f},MRR@10")
             print(f"table4/e={r['e']}/storage,{r['storage_frac']:.4f},frac_of_raw")
         print(f"table4/runtime,{time.time()-t0:.1f},seconds")
 
@@ -84,6 +88,22 @@ def main() -> None:
         for r in rows:
             print(f"{r['name']},{r['value']:.4f},{r['unit']}")
         print(f"serving/runtime,{time.time()-t0:.1f},seconds")
+
+    if "quality" not in skip:
+        # the cascade quality trajectory: codec x join-layer sweep through
+        # the real retrieve-then-rerank path -> repo-root BENCH_quality.json.
+        # --fast shrinks the world / sweep and validates the row schema
+        # WITHOUT writing (same contract as the serving section)
+        from benchmarks import quality
+        from benchmarks.common import assert_bench_schema
+        t0 = time.time()
+        rows = quality.run_quality(steps=steps, fast=args.fast,
+                                   write_bench_file=not args.fast)
+        assert_bench_schema(rows)
+        results["quality_bench"] = rows
+        for r in rows:
+            print(f"{r['name']},{r['value']:.4f},{r['unit']}")
+        print(f"quality/runtime,{time.time()-t0:.1f},seconds")
 
     if "roofline" not in skip and os.path.isdir("results/dryrun"):
         from benchmarks import roofline

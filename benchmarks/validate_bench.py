@@ -1,0 +1,40 @@
+"""Validate every committed ``BENCH_*.json`` trajectory file at the repo
+root against the shared row schema (``benchmarks.common.
+assert_bench_schema``).  CI runs this on every push so a malformed
+trajectory file — wrong keys, NaN values, duplicate row names, truncated
+JSON — fails fast instead of silently breaking the next PR's diff.
+
+Usage: PYTHONPATH=src python -m benchmarks.validate_bench [files...]
+(default: glob BENCH_*.json at the repo root; exits non-zero on any
+violation or when no trajectory file is found).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import sys
+
+from benchmarks.common import REPO_ROOT, load_bench
+
+
+def main(argv: list[str] | None = None) -> int:
+    paths = (argv if argv else
+             sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json"))))
+    if not paths:
+        print(f"validate_bench: no BENCH_*.json found under {REPO_ROOT}")
+        return 1
+    failed = 0
+    for path in paths:
+        try:
+            rows = load_bench(path)
+        except Exception as e:                        # noqa: BLE001
+            print(f"FAIL {os.path.basename(path)}: "
+                  f"{type(e).__name__}: {e}")
+            failed += 1
+            continue
+        print(f"ok   {os.path.basename(path)}: {len(rows)} rows")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -9,6 +9,19 @@ one topic (matching Table 2's query-length stats).  Graded relevance of
 
 The generator also emits CAR-style (heading, paragraph) pairs for compressor
 pre-training: half matching (same topic), half random — mirroring §5.3.
+
+Seeding contract (audited for the CI quality gate): every random draw in
+this module flows from one explicit seed.  ``__post_init__`` derives
+*independent per-stage generators* (topics / docs / queries / labels) from
+``np.random.SeedSequence(seed).spawn``, so each stage's stream is a pure
+function of ``(seed, stage)`` — changing ``n_docs`` regenerates documents
+without silently reshuffling the queries or the relevance labels, which is
+what lets the quality harness sweep corpus sizes while the labels for the
+surviving (query, doc) pairs stay put.  ``candidates()`` seeds per
+``(seed, qi)`` via ``SeedSequence`` keying (plain ``seed + qi`` collides:
+(0, 1) and (1, 0) would share a stream).  Training-time samplers
+(``pair_batch`` / ``car_pairs``) take the caller's ``Generator`` so step
+order stays under the training loop's control.
 """
 from __future__ import annotations
 
@@ -30,6 +43,16 @@ def pack_query(q_ids, max_query_len: int):
     q[: len(packed)] = packed
     valid = np.arange(max_query_len) < len(packed)
     return q, valid
+
+
+def pack_query_batch(query_token_lists, max_query_len: int):
+    """Fixed-shape query batch (retrieval / cascade evaluation) ->
+    (tokens [B, Lq] int32, valid [B, Lq] bool)."""
+    tokens = np.full((len(query_token_lists), max_query_len), PAD, np.int32)
+    valid = np.zeros((len(query_token_lists), max_query_len), bool)
+    for i, q in enumerate(query_token_lists):
+        tokens[i], valid[i] = pack_query(q, max_query_len)
+    return tokens, valid
 
 
 def pack_doc(d_ids, max_doc_len: int):
@@ -63,27 +86,51 @@ class SyntheticIRWorld:
     seed: int = 0
 
     def __post_init__(self):
-        rng = np.random.default_rng(self.seed)
+        # one explicit seed, four independent stage streams (see module
+        # docstring): corpus edits can't perturb queries or labels
+        topic_rng, doc_rng, query_rng, label_rng = (
+            np.random.default_rng(s)
+            for s in np.random.SeedSequence(self.seed).spawn(4))
         v = self.vocab_size - N_SPECIAL
         # per-topic token distributions: Zipf base reordered per topic
         base = 1.0 / np.arange(1, v + 1) ** 1.1
         self.topic_token_logits = np.stack([
-            np.log(base[rng.permutation(v)]) for _ in range(self.n_topics)])
+            np.log(base[topic_rng.permutation(v)])
+            for _ in range(self.n_topics)])
         # documents
-        self.doc_topics = rng.integers(0, self.n_topics, size=(self.n_docs, 2))
-        self.doc_topic_w = rng.dirichlet([1.0, 0.5], size=self.n_docs)
-        self.docs = np.stack([self._sample_doc(rng, i) for i in range(self.n_docs)])
+        self.doc_topics = doc_rng.integers(0, self.n_topics,
+                                           size=(self.n_docs, 2))
+        self.doc_topic_w = doc_rng.dirichlet([1.0, 0.5], size=self.n_docs)
+        self.docs = np.stack([self._sample_doc(doc_rng, i)
+                              for i in range(self.n_docs)])
         # queries: 2-3 tokens from one topic's head
-        self.query_topics = rng.integers(0, self.n_topics, size=self.n_queries)
-        self.queries = [self._sample_query(rng, t) for t in self.query_topics]
-        # graded relevance: topic affinity -> {0,1,2}
+        self.query_topics = query_rng.integers(0, self.n_topics,
+                                               size=self.n_queries)
+        self.queries = [self._sample_query(query_rng, t)
+                        for t in self.query_topics]
+        self.qrels = self._label(label_rng)
+
+    def _label(self, rng: np.random.Generator) -> np.ndarray:
+        """Graded relevance labels [n_queries, n_docs] in {0, 1, 2}:
+        quantized topic affinity + seeded judge noise (TREC-shaped
+        qrels — most docs unjudged-equivalent 0, a thin graded tail)."""
         aff = np.zeros((self.n_queries, self.n_docs))
         for qi, qt in enumerate(self.query_topics):
             m = (self.doc_topics == qt)
             aff[qi] = (m * self.doc_topic_w).sum(-1)
-        noise = rng.normal(0, 0.05, size=aff.shape)
-        a = aff + noise
-        self.qrels = np.where(a > 0.6, 2, np.where(a > 0.25, 1, 0)).astype(np.int32)
+        a = aff + rng.normal(0, 0.05, size=aff.shape)
+        return np.where(a > 0.6, 2,
+                        np.where(a > 0.25, 1, 0)).astype(np.int32)
+
+    # -- relevance-label accessors (cascade evaluation) -----------------------
+    def n_relevant(self, min_grade: int = 1) -> np.ndarray:
+        """Per-query count of corpus-wide relevant docs ([n_queries]
+        int64) — the denominator for recall@k / mean percentile-rank."""
+        return (self.qrels >= min_grade).sum(-1).astype(np.int64)
+
+    def relevant_docs(self, qi: int, min_grade: int = 1) -> np.ndarray:
+        """Doc ids judged >= ``min_grade`` for query ``qi``."""
+        return np.flatnonzero(self.qrels[qi] >= min_grade)
 
     # -- sampling helpers ---------------------------------------------------
     def _topic_probs(self, topics, weights):
@@ -159,8 +206,10 @@ class SyntheticIRWorld:
 
     # -- evaluation -----------------------------------------------------------
     def candidates(self, qi: int, k: int = 100, seed: int = 0):
-        """First-stage candidate pool: top-k by noisy affinity (BM25 stand-in)."""
-        rng = np.random.default_rng(seed + qi)
+        """First-stage candidate pool: top-k by noisy affinity (BM25
+        stand-in; ``repro.retrieval.FirstStageRetriever`` is the real
+        first stage over an index's stored reps)."""
+        rng = np.random.default_rng(np.random.SeedSequence((seed, qi)))
         score = self.qrels[qi] + rng.normal(0, 0.8, size=self.n_docs)
         return np.argsort(score)[::-1][:k]
 

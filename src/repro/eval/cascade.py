@@ -1,0 +1,126 @@
+"""End-to-end cascade evaluation: corpus -> index build -> first-stage
+top-k -> rerank -> IR metrics.
+
+This is the quality loop the compression/pruning roadmap items are judged
+by (PreTTR §6: precomputation and storage codecs must not come "with a
+substantial degradation in ranking performance"; SDR's quality-vs-bytes
+methodology).  One :func:`run_cascade` call measures a full operating
+point — a codec, a join layer ``l``, a candidate depth ``k`` — through the
+*real* production path: the sharded :class:`IndexBuilder` output, pooled
+first-stage retrieval over the index's own stored reps, and the packed
+``RankingService`` reranker, scored with the pure-jnp metrics of
+``repro.eval.metrics`` against the synthetic world's graded qrels.
+
+Both cascade stages are reported: the ``first_stage/*`` metrics show what
+the cheap retriever alone delivers (its recall@k bounds what the reranker
+can ever recover), the ``rerank/*`` metrics the full cascade.
+
+Determinism: every random draw is seeded (world seed, params key) and the
+service drains one fixed FIFO workload, so a (seed, config) pair yields a
+bit-identical result dict — the property the CI quality gate and the
+determinism test in tests/test_metrics.py rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+from typing import Any
+
+import numpy as np
+
+from repro.core import prettr as P
+from repro.data.synthetic_ir import SyntheticIRWorld, pack_query_batch
+from repro.eval import metrics as M
+from repro.index import IndexBuilder, TermRepIndex
+from repro.retrieval import FirstStageRetriever
+from repro.serving import RankingService, RankRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeResult:
+    """One operating point's quality readout."""
+    first_stage: dict[str, float]         # metrics of the retriever alone
+    rerank: dict[str, float]              # metrics of the full cascade
+    meta: dict[str, Any]                  # codec / l / k / sizes / seed
+
+    def flat(self) -> dict[str, float]:
+        """``{"first_stage/<m>": v, "rerank/<m>": v}`` for bench rows."""
+        out = {f"first_stage/{k}": v for k, v in self.first_stage.items()}
+        out.update({f"rerank/{k}": v for k, v in self.rerank.items()})
+        return out
+
+
+def _stage_metrics(world: SyntheticIRWorld, cand_ids: np.ndarray,
+                   cand_scores: np.ndarray, k_metric: int) -> dict:
+    """Score one stage's per-query (doc_ids, scores) against the qrels."""
+    rels = np.stack([world.qrels[qi][cand_ids[qi]]
+                     for qi in range(len(cand_ids))])
+    return M.cascade_metrics(
+        cand_scores, rels, k=k_metric,
+        n_relevant=world.n_relevant(),
+        ideal_rels=world.qrels)
+
+
+def run_cascade(params, cfg: P.PreTTRConfig, world: SyntheticIRWorld, *,
+                codec: str = "fp16", k: int = 32, k_metric: int = 10,
+                n_shards: int = 1, micro_batch: int = 32,
+                index_dir: str | None = None, index: TermRepIndex | None = None,
+                pool: str = "mean", backend: str | None = None,
+                store_layer_kv: bool = False) -> CascadeResult:
+    """Run the full retrieval cascade over ``world`` and score both stages.
+
+    Builds a ``codec``-encoded index from ``world.docs`` (into
+    ``index_dir`` or a temp dir; pass an already-open ``index`` to skip the
+    build), retrieves ``k`` candidates per query with the pooled
+    first-stage retriever, reranks them through a packed
+    ``RankingService``, and returns per-stage metrics at depth
+    ``k_metric``."""
+    if backend is not None:     # one backend family for every stage
+        from repro.models.backend import apply_backend
+        cfg = apply_backend(cfg, backend)
+
+    def _run(idx: TermRepIndex) -> CascadeResult:
+        fs = FirstStageRetriever(params, cfg, idx, pool=pool)
+        q_tokens, q_valid = pack_query_batch(world.queries,
+                                             cfg.max_query_len)
+        cand_ids, cand_scores = (np.asarray(a) for a in
+                                 fs.retrieve(q_tokens, q_valid, k))
+        first_stage = _stage_metrics(world, cand_ids, cand_scores, k_metric)
+        # recall at the full pool depth: the cascade's ceiling — relevant
+        # docs outside the pool are unrecoverable by any reranker
+        rels = np.stack([world.qrels[qi][cand_ids[qi]]
+                         for qi in range(world.n_queries)])
+        ranked, n_valid = M.ranked_rels_from_scores(cand_scores, rels)
+        first_stage["pool_recall"] = float(M.recall_at_k(
+            ranked, n_valid, k, world.n_relevant()).mean())
+
+        svc = RankingService(params, cfg, idx, micro_batch=micro_batch)
+        for qi in range(world.n_queries):
+            svc.submit(RankRequest(q_tokens[qi], q_valid[qi],
+                                   [int(d) for d in cand_ids[qi]],
+                                   request_id=str(qi)))
+        by_qi = {int(r.request_id): r for r in svc.drain()}
+        rr_ids = np.stack([np.asarray(by_qi[qi].doc_ids, np.int64)
+                           for qi in range(world.n_queries)])
+        # responses are already sorted by descending score; feed the sorted
+        # scores so the metrics' stable tie-break matches the service's
+        rr_scores = np.stack([by_qi[qi].scores
+                              for qi in range(world.n_queries)])
+        rerank = _stage_metrics(world, rr_ids, rr_scores, k_metric)
+
+        meta = {"codec": idx.codec.name, "l": cfg.l, "k": k,
+                "k_metric": k_metric, "n_docs": world.n_docs,
+                "n_queries": world.n_queries, "seed": world.seed,
+                "pool": pool, "n_shards": idx.n_shards}
+        return CascadeResult(first_stage=first_stage, rerank=rerank,
+                             meta=meta)
+
+    if index is not None:
+        return _run(index)
+    with tempfile.TemporaryDirectory() as tmp:
+        out_dir = index_dir or tmp
+        builder = IndexBuilder(out_dir, cfg, params, codec=codec,
+                               n_shards=n_shards,
+                               store_layer_kv=store_layer_kv)
+        builder.build(list(world.docs))
+        return _run(TermRepIndex.open(out_dir))

@@ -1,0 +1,150 @@
+"""Rank-quality metrics for the retrieval cascade — pure jnp, batched.
+
+Every metric here consumes the same canonical form: per-query *ranked
+relevance grades* ``[Q, K]`` (grade of the candidate at each rank, 0 =
+not relevant) plus ``n_valid [Q]`` (true candidate-list lengths — rows are
+padded to the fixed K).  :func:`ranked_rels_from_scores` produces that form
+from raw ``(scores, rels)`` with a **stable** descending sort, so score
+ties resolve to the earlier candidate — deterministic, and exactly what a
+serving stack that sorts with a stable comparator would return.
+
+All functions are jnp end to end and jit-able with static ``k`` — they run
+on device right next to the scoring jits, and the same code path is what
+the unit tests pin against hand-computed fixtures (tests/test_metrics.py).
+Conventions for the degenerate cases the cascade actually hits:
+
+* **empty candidate list** (``n_valid == 0``): MRR / hit / nDCG are 0,
+  percentile-rank is 1 (worst) when relevant docs exist.
+* **no relevant docs anywhere** (``n_relevant == 0``): nDCG is 0 (no ideal
+  ordering exists), percentile-rank is 0 (nothing to find).
+* **missing relevant docs** (relevant in the corpus but absent from the
+  candidate list): invisible to MRR/hit/nDCG-over-candidates by
+  construction, so :func:`recall_at_k` and :func:`mean_percentile_rank`
+  take ``n_relevant`` (the per-query corpus-wide relevant count) and charge
+  each missing doc the worst percentile (1.0).
+
+Higher is better for everything except ``mean_percentile_rank``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ranked_rels_from_scores(scores, rels, valid=None):
+    """Sort relevance grades by descending score (stable: ties keep
+    candidate order; invalid rows sink to the end with grade 0).
+
+    scores: [Q, K] float; rels: [Q, K] int grades; valid: [Q, K] bool
+    (default: all valid).  -> (ranked [Q, K] int32, n_valid [Q] int32).
+    """
+    scores = jnp.asarray(scores, jnp.float32)
+    rels = jnp.asarray(rels, jnp.int32)
+    if valid is None:
+        valid = jnp.ones(scores.shape, bool)
+    valid = jnp.asarray(valid, bool)
+    keyed = jnp.where(valid, scores, -jnp.inf)
+    # jnp.argsort is stable; sorting the negated key keeps ties in
+    # ascending candidate order
+    order = jnp.argsort(-keyed, axis=-1)
+    ranked = jnp.take_along_axis(jnp.where(valid, rels, 0), order, axis=-1)
+    return ranked, valid.sum(-1).astype(jnp.int32)
+
+
+def _rank_mask(ranked, n_valid, k: int):
+    """[Q, K] bool: ranks that are both within top-k and real candidates."""
+    pos = jnp.arange(ranked.shape[-1])
+    return (pos[None, :] < k) & (pos[None, :] < n_valid[:, None])
+
+
+def reciprocal_rank_at_k(ranked, n_valid, k: int, min_grade: int = 1):
+    """MRR@k numerator per query: 1/rank of the first candidate with grade
+    >= ``min_grade`` inside the top-k, else 0.  -> [Q] float32."""
+    hit = (ranked >= min_grade) & _rank_mask(ranked, n_valid, k)
+    first = jnp.argmax(hit, axis=-1)              # 0 when no hit anywhere
+    return jnp.where(hit.any(-1), 1.0 / (first + 1.0), 0.0)
+
+
+def hit_at_k(ranked, n_valid, k: int, min_grade: int = 1):
+    """Hit-rate@k per query: 1.0 if any top-k candidate has grade >=
+    ``min_grade``.  -> [Q] float32."""
+    hit = (ranked >= min_grade) & _rank_mask(ranked, n_valid, k)
+    return hit.any(-1).astype(jnp.float32)
+
+
+def ndcg_at_k(ranked, n_valid, k: int, ideal_rels=None):
+    """nDCG@k per query with exponential gain ``2^grade - 1``.
+
+    ``ideal_rels`` (optional, [Q, R]): the query's *corpus-wide* relevance
+    grades, so the ideal DCG reflects what a perfect retriever could have
+    surfaced; default normalizes against the best reordering of the
+    candidate list itself (the rerank-only convention).  Queries whose
+    ideal DCG is 0 (nothing relevant) score 0.  -> [Q] float32.
+    """
+    mask = _rank_mask(ranked, n_valid, k)
+    discounts = 1.0 / jnp.log2(jnp.arange(2, ranked.shape[-1] + 2))
+    gains = (2.0 ** jnp.where(mask, ranked, 0) - 1.0) * discounts[None, :]
+    dcg = jnp.where(mask, gains, 0.0).sum(-1)
+    src = ranked if ideal_rels is None else jnp.asarray(ideal_rels, jnp.int32)
+    ideal = jnp.sort(src, axis=-1)[:, ::-1][:, :k].astype(jnp.float32)
+    if ideal_rels is None:
+        # candidate-list ideal must respect the per-query list length
+        ideal = jnp.where(
+            jnp.arange(ideal.shape[-1])[None, :]
+            < jnp.minimum(n_valid, k)[:, None], ideal, 0.0)
+    idiscount = 1.0 / jnp.log2(jnp.arange(2, ideal.shape[-1] + 2))
+    idcg = ((2.0 ** ideal - 1.0) * idiscount[None, :]).sum(-1)
+    return jnp.where(idcg > 0, dcg / jnp.maximum(idcg, 1e-30), 0.0)
+
+
+def recall_at_k(ranked, n_valid, k: int, n_relevant, min_grade: int = 1):
+    """Fraction of the query's ``n_relevant`` corpus-wide relevant docs
+    found in the top-k of the candidate list — *the* first-stage metric:
+    a reranker cannot recover a document the candidate pool never held.
+    Queries with no relevant docs score 1.0 (nothing was missable).
+    -> [Q] float32."""
+    n_relevant = jnp.asarray(n_relevant, jnp.int32)
+    found = ((ranked >= min_grade)
+             & _rank_mask(ranked, n_valid, k)).sum(-1).astype(jnp.float32)
+    return jnp.where(n_relevant > 0,
+                     found / jnp.maximum(n_relevant, 1), 1.0)
+
+
+def mean_percentile_rank(ranked, n_valid, n_relevant, min_grade: int = 1):
+    """Mean percentile-rank of the relevant docs, per query (lower is
+    better).  A relevant doc at rank r (1-based) in a list of n_valid
+    candidates contributes ``r / n_valid``; each of the query's relevant
+    docs *missing* from the candidate list contributes the worst percentile
+    (1.0).  Queries with no relevant docs score 0.  -> [Q] float32."""
+    n_relevant = jnp.asarray(n_relevant, jnp.int32)
+    pos = jnp.arange(ranked.shape[-1])
+    in_list = pos[None, :] < n_valid[:, None]
+    rel = (ranked >= min_grade) & in_list
+    pct = (pos[None, :] + 1.0) / jnp.maximum(n_valid, 1)[:, None]
+    found_sum = jnp.where(rel, pct, 0.0).sum(-1)
+    n_found = rel.sum(-1)
+    n_missing = jnp.maximum(n_relevant - n_found, 0)
+    total = found_sum + n_missing.astype(jnp.float32)
+    return jnp.where(n_relevant > 0,
+                     total / jnp.maximum(n_relevant, 1), 0.0)
+
+
+def cascade_metrics(scores, rels, valid=None, *, k: int = 10,
+                    n_relevant=None, ideal_rels=None,
+                    min_grade: int = 1) -> dict:
+    """All the cascade's metrics in one pass -> ``{name: float}`` means
+    over queries.  ``scores``/``rels``/``valid``: [Q, K] as in
+    :func:`ranked_rels_from_scores`; ``n_relevant``: [Q] corpus-wide
+    relevant counts (enables recall@k and mean percentile-rank);
+    ``ideal_rels``: [Q, R] corpus-wide grades for the nDCG ideal."""
+    ranked, n_valid = ranked_rels_from_scores(scores, rels, valid)
+    out = {
+        f"mrr@{k}": reciprocal_rank_at_k(ranked, n_valid, k, min_grade),
+        f"hit@{k}": hit_at_k(ranked, n_valid, k, min_grade),
+        f"ndcg@{k}": ndcg_at_k(ranked, n_valid, k, ideal_rels),
+    }
+    if n_relevant is not None:
+        out[f"recall@{k}"] = recall_at_k(ranked, n_valid, k, n_relevant,
+                                         min_grade)
+        out["mpr"] = mean_percentile_rank(ranked, n_valid, n_relevant,
+                                          min_grade)
+    return {name: float(v.mean()) for name, v in out.items()}

@@ -1,0 +1,4 @@
+"""First-stage candidate generation feeding the PreTTR reranker."""
+from repro.retrieval.first_stage import FirstStageRetriever, pool_reps
+
+__all__ = ["FirstStageRetriever", "pool_reps"]

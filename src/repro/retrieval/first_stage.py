@@ -1,0 +1,146 @@
+"""First-stage retrieval over the term-rep index's own stored vectors.
+
+The repo so far reranks externally-supplied candidate lists; this module
+closes the cascade (Pretrained Transformers for Text Ranking: retrieve ->
+rerank) *without a second index*: the :class:`TermRepIndex` already stores
+every document's layer-``l`` term representations, so a cheap first stage
+falls out of pooling them.
+
+* **Doc side (offline, once per index open)** — stream the stored reps out
+  of the index in fixed-shape chunks, decode to model space (codec decode +
+  compressor ``decompress`` when the index is compressed), masked-mean-pool
+  over the stored tokens, optionally L2-normalize, and keep the resulting
+  ``[N, d]`` matrix device-resident.  Chunks are padded to one fixed shape
+  so the pooling jit compiles once.
+* **Query side (per query)** — :func:`repro.core.prettr.encode_query`
+  through layers ``0..l`` (the same computation serving already does, so a
+  production stack shares it via the query-rep cache), pooled the same way
+  (``pool="mean"``) or read at [CLS] (``pool="cls"``).
+* **Scoring** — one batched matmul ``q_pooled @ doc_matrix.T`` and a
+  ``jax.lax.top_k``, jitted end to end; brute force is exact (no ANN
+  recall loss) and O(N·d) per query, which is the right first rung for
+  corpora that fit a device — an ANN structure slots in behind the same
+  ``retrieve()`` signature later.
+
+Candidate ids then feed ``RankingService`` unchanged — the cascade
+evaluator (``repro.eval.cascade``) wires the two stages together and
+scores them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prettr as P
+from repro.index.store import TermRepIndex
+from repro.serving.service import validate_index_compat
+
+
+def pool_reps(reps, valid, *, normalize: bool = True):
+    """Masked mean-pool token reps -> one vector per row.
+
+    reps: [B, L, d]; valid: [B, L] bool -> [B, d] float32 (L2-normalized
+    when ``normalize``; all-invalid rows pool to the zero vector)."""
+    v = jnp.asarray(valid, bool)
+    x = jnp.asarray(reps, jnp.float32) * v[..., None]
+    pooled = x.sum(1) / jnp.maximum(v.sum(1, keepdims=True), 1)
+    if normalize:
+        pooled = pooled / jnp.maximum(
+            jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+    return pooled
+
+
+class FirstStageRetriever:
+    """Brute-force inner-product retrieval over pooled index reps.
+
+    Usage::
+
+        fs = FirstStageRetriever(params, cfg, index)
+        doc_ids, scores = fs.retrieve(q_tokens, q_valid, k=100)   # [B, k] x2
+
+    ``pool``: ``"mean"`` (default) pools queries by masked mean like the
+    doc side; ``"cls"`` reads the query's [CLS] rep (documents have no
+    [CLS] token, so doc vectors are always mean-pooled).  ``normalize``
+    L2-normalizes both sides (cosine scores, default); ``False`` scores
+    raw inner products.  ``chunk`` is the fixed doc-batch shape of the
+    offline pooling pass.
+    """
+
+    def __init__(self, params, cfg: P.PreTTRConfig, index: TermRepIndex, *,
+                 pool: str = "mean", normalize: bool = True, chunk: int = 256,
+                 validate_index: bool = True):
+        if pool not in ("mean", "cls"):
+            raise ValueError(f"pool must be 'mean' or 'cls', got {pool!r}")
+        if validate_index:
+            validate_index_compat(cfg, index)
+        self.params = params
+        self.cfg = cfg
+        self.index = index
+        self.pool = pool
+        self.normalize = bool(normalize)
+        self._encode = jax.jit(
+            lambda p, t, v: P.encode_query(p, cfg, t, v))
+        # decode store bytes -> model space -> pooled, one fixed chunk shape
+        self._pool_docs = jax.jit(
+            lambda p, st, v: pool_reps(
+                P._decode_doc_store(p, cfg, st), v, normalize=normalize))
+        # one batched matmul + top-k, jitted; k is static (per-k cache entry)
+        self._topk = jax.jit(
+            lambda q, docs, k: jax.lax.top_k(q @ docs.T, k),
+            static_argnums=2)
+        self.doc_matrix = self._build_doc_matrix(max(1, int(chunk)))
+
+    def _build_doc_matrix(self, chunk: int):
+        """[N, d] pooled doc vectors from the index's stored streams."""
+        n = len(self.index)
+        pad_to = self.cfg.max_doc_len
+        out = []
+        for lo in range(0, n, chunk):
+            ids = list(range(lo, min(lo + chunk, n)))
+            reps, valid = self.index.gather(ids, pad_to=pad_to)
+            if len(ids) < chunk:           # keep the jit shape fixed
+                pad = chunk - len(ids)
+                reps = np.concatenate(
+                    [reps, np.zeros((pad, *reps.shape[1:]), reps.dtype)])
+                valid = np.concatenate(
+                    [valid, np.zeros((pad, pad_to), bool)])
+            out.append(self._pool_docs(self.params, jnp.asarray(reps),
+                                       jnp.asarray(valid))[: len(ids)])
+        if not out:
+            d = self.cfg.backbone.d_model
+            return jnp.zeros((0, d), jnp.float32)
+        return jnp.concatenate(out, axis=0)
+
+    # -- query side ----------------------------------------------------------
+    def encode_queries(self, q_tokens, q_valid):
+        """[B, Lq] packed query tokens (+valid) -> pooled [B, d]."""
+        reps = self._encode(self.params, jnp.asarray(q_tokens),
+                            jnp.asarray(q_valid))
+        if self.pool == "cls":
+            cls = reps[:, 0].astype(jnp.float32)
+            if self.normalize:
+                cls = cls / jnp.maximum(
+                    jnp.linalg.norm(cls, axis=-1, keepdims=True), 1e-9)
+            return cls
+        return pool_reps(reps, q_valid, normalize=self.normalize)
+
+    # -- scoring -------------------------------------------------------------
+    def score_all(self, q_tokens, q_valid):
+        """Dense scores against every doc -> [B, N] float32 (small-corpus
+        eval path; :meth:`retrieve` is the serving-shaped API)."""
+        return self.encode_queries(q_tokens, q_valid) @ self.doc_matrix.T
+
+    def retrieve(self, q_tokens, q_valid, k: int):
+        """Top-k candidate generation for the reranker.
+
+        q_tokens/q_valid: [B, Lq] -> (doc_ids [B, k] int32 ranked by
+        descending score, scores [B, k] float32).  ``k`` is clamped to the
+        corpus size."""
+        n = self.doc_matrix.shape[0]
+        if n == 0:
+            raise ValueError("cannot retrieve from an empty index")
+        k = min(int(k), n)
+        scores, ids = self._topk(self.encode_queries(q_tokens, q_valid),
+                                 self.doc_matrix, k)
+        return ids.astype(jnp.int32), scores

@@ -1,0 +1,174 @@
+"""IR metrics pinned against hand-computed fixtures (ties, empty candidate
+lists, relevant docs missing from the pool) + cascade determinism: the
+contract the CI quality gate (benchmarks/quality.py) stands on."""
+import numpy as np
+
+from repro.eval import metrics as M
+
+LOG2 = np.log2
+
+
+def _ranked(rels, scores=None, valid=None):
+    """Rels already in rank order unless scores given."""
+    rels = np.asarray(rels)
+    if scores is None:   # descending scores = keep given order
+        scores = -np.arange(rels.shape[-1], dtype=np.float32)[None, :]
+        scores = np.broadcast_to(scores, rels.shape)
+    return M.ranked_rels_from_scores(scores, rels, valid)
+
+
+# -- ranked_rels_from_scores ------------------------------------------------
+
+def test_stable_tie_break_keeps_candidate_order():
+    # all scores equal: ranking must be the original candidate order
+    ranked, n_valid = M.ranked_rels_from_scores(
+        np.ones((1, 4)), np.array([[3, 0, 2, 1]]))
+    assert ranked.tolist() == [[3, 0, 2, 1]]
+    assert n_valid.tolist() == [4]
+
+
+def test_invalid_candidates_sink_with_grade_zero():
+    ranked, n_valid = M.ranked_rels_from_scores(
+        np.array([[1.0, 9.0, 5.0]]), np.array([[1, 2, 1]]),
+        valid=np.array([[True, False, True]]))
+    # the masked grade-2 candidate must not appear anywhere in the ranking
+    assert ranked.tolist() == [[1, 1, 0]]
+    assert n_valid.tolist() == [2]
+
+
+# -- MRR / hit-rate ---------------------------------------------------------
+
+def test_mrr_hand_computed():
+    rels = [[0, 0, 1, 0],    # first relevant at rank 3
+            [1, 0, 0, 0],    # at rank 1
+            [0, 0, 0, 0]]    # none
+    ranked, n_valid = _ranked(rels)
+    np.testing.assert_allclose(
+        M.reciprocal_rank_at_k(ranked, n_valid, 4),
+        [1 / 3, 1.0, 0.0])
+    # cutoff excludes the rank-3 hit
+    np.testing.assert_allclose(
+        M.reciprocal_rank_at_k(ranked, n_valid, 2), [0.0, 1.0, 0.0])
+    np.testing.assert_allclose(M.hit_at_k(ranked, n_valid, 4),
+                               [1.0, 1.0, 0.0])
+    np.testing.assert_allclose(M.hit_at_k(ranked, n_valid, 2),
+                               [0.0, 1.0, 0.0])
+
+
+def test_min_grade_filters_marginal_hits():
+    ranked, n_valid = _ranked([[1, 2, 0]])
+    np.testing.assert_allclose(
+        M.reciprocal_rank_at_k(ranked, n_valid, 3, min_grade=2), [0.5])
+
+
+# -- nDCG -------------------------------------------------------------------
+
+def test_ndcg_hand_computed():
+    # grades in rank order [1, 2, 0]; ideal ordering is [2, 1, 0]
+    ranked, n_valid = _ranked([[1, 2, 0]])
+    dcg = (2**1 - 1) / LOG2(2) + (2**2 - 1) / LOG2(3)
+    idcg = (2**2 - 1) / LOG2(2) + (2**1 - 1) / LOG2(3)
+    np.testing.assert_allclose(M.ndcg_at_k(ranked, n_valid, 3),
+                               [dcg / idcg], rtol=1e-6)
+    # perfectly ordered list scores exactly 1
+    ranked2, n_valid2 = _ranked([[2, 1, 0]])
+    np.testing.assert_allclose(M.ndcg_at_k(ranked2, n_valid2, 3), [1.0],
+                               rtol=1e-6)
+
+
+def test_ndcg_corpus_wide_ideal_penalizes_missing_docs():
+    # pool only found a grade-1 doc, but the corpus holds a grade-2 one:
+    # the ideal must include what a perfect retriever could have surfaced
+    ranked, n_valid = _ranked([[1, 0]])
+    ideal_rels = np.array([[2, 1, 0, 0]])
+    dcg = (2**1 - 1) / LOG2(2)
+    idcg = (2**2 - 1) / LOG2(2) + (2**1 - 1) / LOG2(3)
+    np.testing.assert_allclose(
+        M.ndcg_at_k(ranked, n_valid, 2, ideal_rels=ideal_rels),
+        [dcg / idcg], rtol=1e-6)
+
+
+def test_ndcg_no_relevant_is_zero_not_nan():
+    ranked, n_valid = _ranked([[0, 0, 0]])
+    np.testing.assert_allclose(M.ndcg_at_k(ranked, n_valid, 3), [0.0])
+
+
+# -- degenerate candidate lists --------------------------------------------
+
+def test_empty_candidate_list():
+    valid = np.zeros((1, 4), bool)
+    ranked, n_valid = M.ranked_rels_from_scores(
+        np.zeros((1, 4)), np.array([[2, 1, 0, 1]]), valid=valid)
+    assert n_valid.tolist() == [0]
+    assert float(M.reciprocal_rank_at_k(ranked, n_valid, 4)[0]) == 0.0
+    assert float(M.hit_at_k(ranked, n_valid, 4)[0]) == 0.0
+    assert float(M.ndcg_at_k(ranked, n_valid, 4)[0]) == 0.0
+    assert float(M.recall_at_k(ranked, n_valid, 4,
+                               n_relevant=np.array([2]))[0]) == 0.0
+    # nothing found: every relevant doc charged the worst percentile
+    assert float(M.mean_percentile_rank(ranked, n_valid,
+                                        n_relevant=np.array([2]))[0]) == 1.0
+
+
+def test_no_relevant_docs_anywhere():
+    ranked, n_valid = _ranked([[0, 0, 0]])
+    zero = np.array([0])
+    assert float(M.recall_at_k(ranked, n_valid, 3, zero)[0]) == 1.0
+    assert float(M.mean_percentile_rank(ranked, n_valid, zero)[0]) == 0.0
+
+
+# -- recall / mean percentile-rank vs corpus-wide counts --------------------
+
+def test_recall_counts_against_corpus_not_pool():
+    # pool surfaced 2 of the query's 4 relevant docs
+    ranked, n_valid = _ranked([[1, 0, 1, 0]])
+    np.testing.assert_allclose(
+        M.recall_at_k(ranked, n_valid, 4, np.array([4])), [0.5])
+    # tighter cutoff only sees the first
+    np.testing.assert_allclose(
+        M.recall_at_k(ranked, n_valid, 2, np.array([4])), [0.25])
+
+
+def test_mpr_missing_relevant_charged_worst_percentile():
+    # ranks 1 and 3 of 4 hold relevant docs; a third relevant doc never
+    # made the pool -> (1/4 + 3/4 + 1.0) / 3
+    ranked, n_valid = _ranked([[1, 0, 1, 0]])
+    np.testing.assert_allclose(
+        M.mean_percentile_rank(ranked, n_valid, np.array([3])),
+        [(0.25 + 0.75 + 1.0) / 3], rtol=1e-6)
+
+
+# -- cascade_metrics / determinism ------------------------------------------
+
+def test_cascade_metrics_keys_and_means():
+    out = M.cascade_metrics(
+        np.array([[3.0, 2.0, 1.0], [3.0, 2.0, 1.0]]),
+        np.array([[1, 0, 0], [0, 0, 0]]),
+        k=3, n_relevant=np.array([1, 0]))
+    assert set(out) == {"mrr@3", "hit@3", "ndcg@3", "recall@3", "mpr"}
+    np.testing.assert_allclose(out["mrr@3"], 0.5)       # mean of [1, 0]
+    np.testing.assert_allclose(out["recall@3"], 1.0)    # [1, vacuous 1]
+
+
+def test_cascade_run_is_bit_deterministic(tmp_path):
+    # same (seed, config) -> bit-identical payload, the property the CI
+    # quality gate's exact-match fp32 check relies on
+    import jax
+    import jax.numpy as jnp
+    from repro.core.prettr import PreTTRConfig, init_prettr, make_backbone
+    from repro.data.synthetic_ir import SyntheticIRWorld
+    from repro.eval.cascade import run_cascade
+
+    bb = make_backbone(n_layers=2, d_model=16, n_heads=2, d_ff=32,
+                       vocab_size=64, l=1, max_len=24,
+                       compute_dtype=jnp.float32, block_kv=8)
+    cfg = PreTTRConfig(backbone=bb, l=1, max_query_len=8, max_doc_len=16,
+                       compress_dim=0)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    world = SyntheticIRWorld(n_docs=24, n_queries=4, vocab_size=64,
+                             doc_len=12, seed=5)
+    runs = [run_cascade(params, cfg, world, codec="fp32", k=8, k_metric=4,
+                        index_dir=str(tmp_path / f"idx{i}"))
+            for i in range(2)]
+    assert runs[0].flat() == runs[1].flat()
+    assert runs[0].meta == runs[1].meta

@@ -1,0 +1,120 @@
+"""First-stage retriever: pooling math, exactness of the batched top-k
+against dense numpy scoring, chunked doc-matrix construction, codecs and
+compression, and edge cases (k > corpus, empty index)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prettr import PreTTRConfig, init_prettr, make_backbone
+from repro.data.synthetic_ir import SyntheticIRWorld, pack_query_batch
+from repro.index import IndexBuilder, TermRepIndex
+from repro.retrieval import FirstStageRetriever, pool_reps
+
+
+def _cfg(l=1, compress_dim=0, d_model=32):
+    bb = make_backbone(n_layers=3, d_model=d_model, n_heads=2, d_ff=64,
+                       vocab_size=128, l=l, max_len=24,
+                       compute_dtype=jnp.float32, block_kv=8)
+    return PreTTRConfig(backbone=bb, l=l, max_query_len=8, max_doc_len=16,
+                        compress_dim=compress_dim)
+
+
+def _world(n_docs=20, n_queries=4, seed=11):
+    return SyntheticIRWorld(n_docs=n_docs, n_queries=n_queries,
+                            vocab_size=128, doc_len=12, seed=seed)
+
+
+def _retriever(tmp_path, codec="fp16", compress_dim=0, n_docs=20, **kw):
+    cfg = _cfg(compress_dim=compress_dim)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    world = _world(n_docs=n_docs)
+    IndexBuilder(str(tmp_path / "idx"), cfg, params, codec=codec,
+                 batch_size=8).build(list(world.docs))
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    return FirstStageRetriever(params, cfg, idx, **kw), world, cfg
+
+
+def test_pool_reps_hand_computed():
+    reps = np.zeros((1, 3, 2), np.float32)
+    reps[0, 0] = [1.0, 0.0]
+    reps[0, 1] = [3.0, 4.0]
+    reps[0, 2] = [99.0, 99.0]                     # masked out
+    valid = np.array([[True, True, False]])
+    out = np.asarray(pool_reps(reps, valid, normalize=False))
+    np.testing.assert_allclose(out, [[2.0, 2.0]], rtol=1e-6)
+    normed = np.asarray(pool_reps(reps, valid))
+    np.testing.assert_allclose(np.linalg.norm(normed, axis=-1), [1.0],
+                               rtol=1e-6)
+
+
+def test_pool_reps_all_invalid_is_zero_vector():
+    out = np.asarray(pool_reps(np.ones((1, 3, 4)), np.zeros((1, 3), bool)))
+    np.testing.assert_allclose(out, np.zeros((1, 4)))
+
+
+def test_retrieve_matches_dense_argsort(tmp_path):
+    fs, world, cfg = _retriever(tmp_path)
+    q_tokens, q_valid = pack_query_batch(world.queries, cfg.max_query_len)
+    dense = np.asarray(fs.score_all(q_tokens, q_valid))
+    ids, scores = (np.asarray(a) for a in fs.retrieve(q_tokens, q_valid, 5))
+    assert ids.shape == (world.n_queries, 5)
+    assert scores.shape == (world.n_queries, 5)
+    for qi in range(world.n_queries):
+        # scores must be the 5 largest dense scores, descending
+        np.testing.assert_allclose(scores[qi],
+                                   np.sort(dense[qi])[::-1][:5], rtol=1e-5)
+        np.testing.assert_allclose(dense[qi][ids[qi]], scores[qi], rtol=1e-5)
+
+
+@pytest.mark.parametrize("codec", ["fp32", "fp16", "int8"])
+def test_codecs_retrieve_similar_rankings(tmp_path, codec):
+    fs, world, cfg = _retriever(tmp_path, codec=codec)
+    q_tokens, q_valid = pack_query_batch(world.queries, cfg.max_query_len)
+    ids, scores = fs.retrieve(q_tokens, q_valid, 4)
+    assert np.isfinite(np.asarray(scores)).all()
+    # cosine scores stay bounded
+    assert np.abs(np.asarray(scores)).max() <= 1.0 + 1e-4
+
+
+def test_compressed_index_pools_in_model_space(tmp_path):
+    fs, world, cfg = _retriever(tmp_path, compress_dim=8)
+    # stored reps are 8-dim, but pooled vectors live in decompressed space
+    assert fs.doc_matrix.shape == (world.n_docs, cfg.backbone.d_model)
+
+
+def test_chunked_build_matches_single_chunk(tmp_path):
+    fs_a, world, cfg = _retriever(tmp_path, chunk=7)     # 20 docs: 7,7,6
+    params = fs_a.params
+    fs_b = FirstStageRetriever(params, cfg, fs_a.index, chunk=64)
+    np.testing.assert_allclose(np.asarray(fs_a.doc_matrix),
+                               np.asarray(fs_b.doc_matrix), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_k_clamped_to_corpus_size(tmp_path):
+    fs, world, cfg = _retriever(tmp_path, n_docs=6)
+    q_tokens, q_valid = pack_query_batch(world.queries, cfg.max_query_len)
+    ids, scores = fs.retrieve(q_tokens, q_valid, 50)
+    assert ids.shape == (world.n_queries, 6)
+    # every doc returned exactly once per query
+    assert all(sorted(row.tolist()) == list(range(6))
+               for row in np.asarray(ids))
+
+
+def test_cls_pooling_differs_from_mean(tmp_path):
+    fs_mean, world, cfg = _retriever(tmp_path)
+    fs_cls = FirstStageRetriever(fs_mean.params, cfg, fs_mean.index,
+                                 pool="cls")
+    q_tokens, q_valid = pack_query_batch(world.queries, cfg.max_query_len)
+    qm = np.asarray(fs_mean.encode_queries(q_tokens, q_valid))
+    qc = np.asarray(fs_cls.encode_queries(q_tokens, q_valid))
+    assert qm.shape == qc.shape
+    assert not np.allclose(qm, qc)
+
+
+def test_bad_pool_rejected(tmp_path):
+    fs, _, cfg = _retriever(tmp_path)
+    with pytest.raises(ValueError, match="pool"):
+        FirstStageRetriever(fs.params, cfg, fs.index, pool="max")
