@@ -72,8 +72,10 @@ def main() -> None:
               f"{rows[0]['reduction_fp16']:.4f},frac (paper: 0.975)")
 
     if "serving" not in skip:
-        # the serving perf trajectory: legacy vs fused+cache on a zipf
-        # candidate stream -> repo-root BENCH_serving.json.  --fast shrinks
+        # the serving perf trajectory: legacy vs fused+cache vs
+        # fused_int8_paged (in-kernel dequant + paged cache) on a zipf
+        # candidate stream, with dispatch/H2D/HBM-byte counters per
+        # config -> repo-root BENCH_serving.json.  --fast shrinks
         # the workload and validates the row schema WITHOUT writing: tiny
         # dispatch-bound sizes must never overwrite the committed
         # trajectory numbers

@@ -1,0 +1,132 @@
+"""The serving perf trajectory gate: ``BENCH_serving.json`` at the repo
+root, the speed twin of ``benchmarks/quality.py``'s quality gate.
+
+``benchmarks/table5_latency.py --service`` writes the trajectory (QPS /
+p50 / p99 / phase split / dispatch + byte counters for the legacy, fused
+and fused_int8_paged configurations).  This module re-runs that workload
+(same seeds, same sizes) and diffs the fresh rows against the committed
+file:
+
+* **deterministic counter rows** (dispatch counts, batch counts, hit
+  rates, byte counters, pack fill) must match the baseline *exactly* —
+  a drifted dispatch count is a silently-regressed hot path (e.g. the
+  standalone decode dispatch sneaking back in), not timing noise;
+* **wall-clock rows** (qps, p50, p99, per-phase µs) gate with a generous
+  relative epsilon in their *direction* (+qps is better, −latency is
+  better) — CI machines are noisy, so only large regressions fail;
+  improvements never fail, they just mean the baseline deserves a
+  refresh;
+* **row-set drift fails both ways** — a renamed or vanished
+  configuration must arrive with a regenerated baseline, not slip
+  through the diff.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.serving                  # rewrite
+    PYTHONPATH=src python -m benchmarks.serving \\
+        --out /tmp/s.json --check-baseline BENCH_serving.json    # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import load_bench, write_bench
+
+#: wall-clock metrics -> direction; +1 = higher is better, -1 = lower is
+#: better.  Everything else in the file is a deterministic counter.
+CLOCK_SPEC = {
+    "qps": +1,
+    "p50_us": -1,
+    "p99_us": -1,
+    "query_encode_us": -1,
+    "load_us": -1,
+    "combine_us": -1,
+}
+
+#: tolerated relative regression on wall-clock rows (shared-CPU CI noise
+#: is large; the gate catches collapses, the trajectory file catches
+#: drift)
+DEFAULT_EPSILON = 0.5
+
+
+def check_serving_regression(rows, baseline_rows, *,
+                             epsilon: float = DEFAULT_EPSILON) -> list[str]:
+    """Compare fresh serving rows against the committed baseline.
+    Returns human-readable failures (empty = gate passes)."""
+    new = {r["name"]: float(r["value"]) for r in rows}
+    base = {r["name"]: float(r["value"]) for r in baseline_rows}
+    failures = []
+    for name in sorted(base.keys() - new.keys()):
+        failures.append(f"baseline row {name!r} missing from this run "
+                        f"(regenerate the baseline if intentional)")
+    for name in sorted(new.keys() - base.keys()):
+        failures.append(f"new row {name!r} absent from the baseline "
+                        f"(regenerate the baseline to admit it)")
+    for name in sorted(new.keys() & base.keys()):
+        nv, bv = new[name], base[name]
+        metric = name.split("/")[-1]
+        direction = CLOCK_SPEC.get(metric)
+        if direction is None:
+            # the speedup ratios divide two wall-clock rows — gate them
+            # like clocks (higher is better); everything else is an
+            # exact-match deterministic counter
+            if metric.endswith("_qps"):
+                direction = +1
+            elif nv != bv:
+                failures.append(
+                    f"{name}: {nv!r} != baseline {bv!r} (deterministic "
+                    f"counter rows must match exactly — a drifted "
+                    f"dispatch/byte count is a hot-path regression, not "
+                    f"noise)")
+                continue
+            else:
+                continue
+        rel = (bv - nv) * direction / max(abs(bv), 1e-9)
+        if rel > epsilon:
+            worse = "below" if direction > 0 else "above"
+            failures.append(
+                f"{name}: {nv:.3f} is {rel:.0%} {worse} baseline "
+                f"{bv:.3f} (epsilon {epsilon:.0%})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="serving perf trajectory + CI regression gate")
+    ap.add_argument("--out", default=None,
+                    help="write rows here instead of the repo-root "
+                         "BENCH_serving.json")
+    ap.add_argument("--no-write", action="store_true",
+                    help="compute + validate rows without writing any file")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="compare the fresh rows against this committed "
+                         "BENCH_serving.json; exit 1 on regression")
+    ap.add_argument("--epsilon", type=float, default=DEFAULT_EPSILON,
+                    help="tolerated relative wall-clock regression vs the "
+                         "baseline (counters always match exactly)")
+    ap.add_argument("--backend", default="blocked",
+                    choices=["plain", "blocked", "pallas"])
+    args = ap.parse_args()
+
+    from benchmarks.table5_latency import run_service
+
+    rows = run_service(backend=args.backend, write_bench=False)
+    if not args.no_write:
+        from benchmarks.common import BENCH_SERVING_PATH
+        path = write_bench(rows, args.out or BENCH_SERVING_PATH)
+        print(f"[serving] wrote {len(rows)} rows -> {path}")
+    if args.check_baseline:
+        failures = check_serving_regression(
+            rows, load_bench(args.check_baseline), epsilon=args.epsilon)
+        if failures:
+            print(f"[serving] REGRESSION vs {args.check_baseline}:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        print(f"[serving] gate passed vs {args.check_baseline} "
+              f"(epsilon={args.epsilon})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

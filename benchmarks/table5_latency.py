@@ -169,7 +169,10 @@ def _drive_service(svc, queries, cand_lists, concurrency):
             "join_dispatch": float(s.n_join_dispatch),
             "decode_dispatch": float(s.n_decode_dispatch),
             "pack_fill": s.pack_fill,
-            "doc_cache_hit_rate": s.doc_cache_hit_rate}
+            "doc_cache_hit_rate": s.doc_cache_hit_rate,
+            "h2d_mb": s.h2d_bytes / 2**20,
+            "doc_hbm_mb": s.doc_hbm_bytes / 2**20,
+            "resident_docs": float(s.resident_docs)}
 
 
 def run_service(backend: str = "blocked", concurrency: int = 8,
@@ -178,32 +181,41 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
                 l: int = 3, max_q: int = 16, max_d: int = 192,
                 n_docs: int = 512, codec: str = "fp16", n_shards: int = 2,
                 zipf: float = 1.3, doc_cache_mb: float = 32.0,
-                store_layer_kv: bool = True,
+                store_layer_kv: bool = True, page_tokens: int = 32,
                 write_bench: bool = True) -> list[dict]:
     """The serving perf trajectory: QPS / p50 / p99 / per-phase µs of the
     RankingService on a zipf candidate stream (``zipf`` > 0 skews candidate
-    draws toward hot documents; 0 = uniform), measured for two
-    configurations over the same workload and index:
+    draws toward hot documents; 0 = uniform) over variable-length documents
+    (uniform in ``[max_d/4, max_d)`` tokens), measured for three
+    configurations over the same workload:
 
     * **legacy** — the PR-4 baseline: concat join, no stored K/V, no doc
       cache (every candidate is gathered, H2D-shipped and decoded per
       request);
     * **fused** — the fused split-KV join consuming the index's stored
       layer-``l`` K/V streams (when ``store_layer_kv``), with the
-      device-resident hot-doc cache (``doc_cache_mb`` MiB).
+      device-resident hot-doc cache (``doc_cache_mb`` MiB);
+    * **fused_int8_paged** — the same join over an int8 index (reps *and*
+      K/V streams quantized): the cache pools hold raw int8 bytes in
+      ``page_tokens``-token pages with per-batch page-table bucketing, and
+      the join kernel dequantizes in-register — no standalone decode
+      dispatch anywhere (``decode_dispatch = 0``).
 
     The default sizes sit at the paper's headline operating point — ``l =
     n-1`` (the query-time join is just the CLS-only final layer), long
     documents, many candidates — where serving is *load*-bound (SDR's
     regime: moving doc representations dominates scoring them).  There the
-    two optimizations are visible separately in the phase split: the warm
-    cache removes most of ``load_us`` and the stored K/V removes the CLS
-    layer's doc-side projections from ``combine_us``.
+    optimizations are visible separately in the phase split: the warm
+    cache removes most of ``load_us``, the stored K/V removes the CLS
+    layer's doc-side projections from ``combine_us``, and int8 paging
+    halves the doc-side bytes the join touches (``doc_hbm_mb``).
 
-    Writes the ``{name, value, unit}`` rows of both configurations (plus
-    the speedup) to the repo-root ``BENCH_serving.json`` so future PRs can
-    diff serving perf; the writer asserts the file schema.
+    Writes the ``{name, value, unit}`` rows of all configurations (plus
+    the speedups) to the repo-root ``BENCH_serving.json`` so future PRs can
+    diff serving perf (``benchmarks/serving.py --check-baseline`` gates on
+    it); the writer asserts the file schema.
     """
+    import os as _os
     import tempfile
 
     import numpy as np
@@ -226,7 +238,8 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
     params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(0)
-    doc_lists = [rng.integers(5, 1000, size=max_d - 1) for _ in range(n_docs)]
+    doc_lens = rng.integers(max_d // 4, max_d, size=n_docs)
+    doc_lists = [rng.integers(5, 1000, size=int(n)) for n in doc_lens]
     queries = [pack_query(rng.integers(5, 1000, size=max_q - 2), max_q)
                for _ in range(n_queries)]
     if zipf > 0:     # skewed candidate stream: hot docs repeat across queries
@@ -238,43 +251,62 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
                       for _ in range(n_queries)]
 
     rows = []
+    units = {"qps": "qps", "p50_us": "us", "p99_us": "us",
+             "query_encode_us": "us/query", "load_us": "us/query",
+             "combine_us": "us/query", "n_batches": "count",
+             "join_dispatch": "dispatches",
+             "decode_dispatch": "dispatches", "pack_fill": "frac",
+             "doc_cache_hit_rate": "frac", "h2d_mb": "MiB",
+             "doc_hbm_mb": "MiB", "resident_docs": "docs"}
     with tempfile.TemporaryDirectory() as tmp:
-        builder = IndexBuilder(tmp, cfg, params, codec=codec,
-                               n_shards=n_shards, batch_size=64,
-                               store_layer_kv=store_layer_kv)
-        builder.build(doc_lists)
-        idx = TermRepIndex.open(tmp)
+        fp_dir = _os.path.join(tmp, "float")
+        q_dir = _os.path.join(tmp, "int8")
+        IndexBuilder(fp_dir, cfg, params, codec=codec, n_shards=n_shards,
+                     batch_size=64,
+                     store_layer_kv=store_layer_kv).build(doc_lists)
+        IndexBuilder(q_dir, cfg, params, codec="int8", n_shards=n_shards,
+                     batch_size=64, store_layer_kv=store_layer_kv,
+                     kv_codec="int8" if store_layer_kv else None,
+                     ).build(doc_lists)
+        idx = TermRepIndex.open(fp_dir)
+        idx8 = TermRepIndex.open(q_dir)
 
         configs = [
-            ("legacy", dict(fused=False, use_layer_kv=False)),
-            ("fused", dict(fused=True, doc_cache_mb=doc_cache_mb)),
+            ("legacy", idx, dict(fused=False, use_layer_kv=False)),
+            ("fused", idx, dict(fused=True, doc_cache_mb=doc_cache_mb)),
+            ("fused_int8_paged", idx8,
+             dict(fused=True, doc_cache_mb=doc_cache_mb,
+                  page_tokens=page_tokens, page_bucket=True)),
         ]
         results = {}
-        for name, kw in configs:
-            svc = RankingService(params, cfg, idx, micro_batch=micro_batch,
-                                 **kw)
+        for name, index, kw in configs:
+            svc = RankingService(params, cfg, index,
+                                 micro_batch=micro_batch, **kw)
             r = _drive_service(svc, queries, cand_lists, concurrency)
             results[name] = r
-            print(f"[table5] service {backend} codec={codec} "
+            print(f"[table5] service {backend} codec={index.codec.name} "
                   f"concurrency={concurrency} join={name}: "
                   f"QPS={r['qps']:.2f} p50={r['p50_us']/1e3:.1f}ms "
                   f"p99={r['p99_us']/1e3:.1f}ms "
                   f"(batches={r['n_batches']:.0f} "
                   f"join_dispatch={r['join_dispatch']:.0f} "
+                  f"decode_dispatch={r['decode_dispatch']:.0f} "
                   f"pack_fill={r['pack_fill']:.2f} "
-                  f"cache_hit={r['doc_cache_hit_rate']:.2f})")
-            units = {"qps": "qps", "p50_us": "us", "p99_us": "us",
-                     "query_encode_us": "us/query", "load_us": "us/query",
-                     "combine_us": "us/query", "n_batches": "count",
-                     "join_dispatch": "dispatches",
-                     "decode_dispatch": "dispatches", "pack_fill": "frac",
-                     "doc_cache_hit_rate": "frac"}
+                  f"cache_hit={r['doc_cache_hit_rate']:.2f} "
+                  f"h2d={r['h2d_mb']:.2f}MiB "
+                  f"doc_hbm={r['doc_hbm_mb']:.2f}MiB "
+                  f"resident={r['resident_docs']:.0f})")
             rows += [{"name": f"serving/{name}/{k}", "value": float(v),
                       "unit": units[k]} for k, v in r.items()]
     speedup = results["fused"]["qps"] / max(1e-9, results["legacy"]["qps"])
     rows.append({"name": "serving/fused_over_legacy_qps", "value": speedup,
                  "unit": "x"})
-    print(f"[table5] fused+cache vs legacy QPS: {speedup:.2f}x")
+    paged_x = (results["fused_int8_paged"]["qps"]
+               / max(1e-9, results["fused"]["qps"]))
+    rows.append({"name": "serving/int8_paged_over_fused_qps",
+                 "value": paged_x, "unit": "x"})
+    print(f"[table5] fused+cache vs legacy QPS: {speedup:.2f}x; "
+          f"int8+paged vs fused QPS: {paged_x:.2f}x")
     if write_bench:
         path = write_bench_serving(rows)
         print(f"[table5] wrote {len(rows)} rows -> {path}")
@@ -319,6 +351,9 @@ def main() -> None:
     ap.add_argument("--no-store-layer-kv", action="store_true",
                     help="--service: build the index without the stored "
                          "layer-l K/V streams")
+    ap.add_argument("--page-tokens", type=int, default=32,
+                    help="--service: doc-cache page size for the "
+                         "fused_int8_paged configuration")
     ap.add_argument("--no-bench-file", action="store_true",
                     help="--service: skip writing BENCH_serving.json")
     args = ap.parse_args()
@@ -330,6 +365,7 @@ def main() -> None:
                     n_shards=args.index_shards, zipf=args.zipf,
                     doc_cache_mb=args.doc_cache_mb,
                     store_layer_kv=not args.no_store_layer_kv,
+                    page_tokens=args.page_tokens,
                     write_bench=not args.no_bench_file)
         return
     sizes = dict(n_layers=args.layers, d_model=args.d_model,

@@ -272,6 +272,34 @@ def _decode_doc_store(params, cfg: PreTTRConfig, doc_store):
 
 
 @dataclasses.dataclass
+class PagedDocKV:
+    """Stored layer-``l`` doc K/V living in the device doc cache's
+    token-page pools, consumed by the join without ever materializing a
+    dense per-batch copy (the pallas impl walks ``page_table`` in its
+    index maps; the reference impls gather pages in-jit).
+
+    ``k``/``v``: [P, page, Hkv, Dh] pools; ``valid``: [P, page] int pool
+    (the cache's page 0 is all-zero, so padded page-table tails mask
+    themselves); ``page_table``: [B, nP] i32; ``k_scale``/``v_scale``:
+    optional [P, page, 1] fp32 per-token dequant scale pools when the
+    K/V pools hold raw int8 codec payload."""
+    k: Any
+    v: Any
+    valid: Any
+    page_table: Any
+    k_scale: Any = None
+    v_scale: Any = None
+
+
+jax.tree_util.register_pytree_node(
+    PagedDocKV,
+    lambda p: ((p.k, p.v, p.valid, p.page_table, p.k_scale, p.v_scale),
+               None),
+    lambda _, c: PagedDocKV(*c),
+)
+
+
+@dataclasses.dataclass
 class JoinState:
     """Query-time join operands, segment-resident.
 
@@ -280,7 +308,11 @@ class JoinState:
     exists; attention runs over the split K/V pair via the
     ``join_attention`` backend op.  ``doc_k``/``doc_v`` (optional) are the
     index's stored layer-``l`` K/V streams in model layout, letting layer
-    ``l`` skip the doc-side K/V projections entirely.
+    ``l`` skip the doc-side K/V projections entirely; with
+    ``doc_k_scale``/``doc_v_scale`` they are raw int8 payload plus
+    per-token fp32 scales, dequantized inside the join impl (in-register
+    for pallas).  ``doc_kv_paged`` replaces the dense pair with a
+    :class:`PagedDocKV` pool view.
     """
     x_q: Any                         # [B, Lq, d] query reps (compute dtype)
     q_valid: Any                     # [B, Lq] bool
@@ -288,25 +320,66 @@ class JoinState:
     d_valid: Any                     # [B, Ld] bool
     doc_k: Any = None                # [B, Ld, Hkv, Dh] stored layer-l K
     doc_v: Any = None                # [B, Ld, Hkv, Dh] stored layer-l V
+    doc_k_scale: Any = None          # [B, Ld] f32 (raw-int8 doc_k)
+    doc_v_scale: Any = None          # [B, Ld] f32 (raw-int8 doc_v)
+    doc_kv_paged: Any = None         # PagedDocKV
     fused: bool = True
+
+
+def _stored_kv_operand(st: JoinState):
+    """The layer-``l`` stored-KV operand of a JoinState in the form the
+    split layer functions dispatch on (None / (k, v) / (k, v, ks, vs) /
+    PagedDocKV)."""
+    if st.doc_kv_paged is not None:
+        return st.doc_kv_paged
+    if st.doc_k is None:
+        return None
+    if st.doc_k_scale is not None:
+        return (st.doc_k, st.doc_v, st.doc_k_scale, st.doc_v_scale)
+    return (st.doc_k, st.doc_v)
 
 
 def prepare_join(params, cfg: PreTTRConfig, q_reps, q_valid, doc_store,
                  doc_valid, *, doc_kv=None, fused: bool = True) -> JoinState:
     """Decode the index payload and build the :class:`JoinState` that
-    :func:`score_join` consumes.  ``doc_kv``: optional ``(k, v)`` stored
-    layer-``l`` streams, each [B, Ld, n_kv_heads * dh] (fused path only)."""
+    :func:`score_join` consumes.  ``doc_kv`` supplies the stored
+    layer-``l`` streams (fused path only) in one of three forms:
+    ``(k, v)`` raw floats each [B, Ld, n_kv_heads * dh];
+    ``(k, v, k_scale, v_scale)`` int8 payload plus [B, Ld] fp32 scales
+    (dequantized inside the join impl); or a :class:`PagedDocKV` whose
+    pools may arrive flat ([P, page, d_kv] / [P, page] scales) straight
+    from the device doc cache — they are reshaped to kernel page layout
+    here."""
     bcfg = cfg.backbone
     x_d = _decode_doc_store(params, cfg, doc_store)
-    doc_k = doc_v = None
+    doc_k = doc_v = doc_k_scale = doc_v_scale = doc_kv_paged = None
     if doc_kv is not None:
         if not fused:
             raise ValueError(
                 "stored layer-l doc K/V streams require the fused join "
                 "path (the legacy concat path re-projects at layer l)")
         b, ld = x_d.shape[0], x_d.shape[1]
-        doc_k, doc_v = (a.reshape(b, ld, bcfg.n_kv_heads, bcfg.dh)
-                        .astype(bcfg.compute_dtype) for a in doc_kv)
+        hkv, dh = bcfg.n_kv_heads, bcfg.dh
+        if isinstance(doc_kv, PagedDocKV):
+            page = doc_kv.k.shape[1]
+            doc_kv_paged = PagedDocKV(
+                k=doc_kv.k.reshape(-1, page, hkv, dh),
+                v=doc_kv.v.reshape(-1, page, hkv, dh),
+                valid=doc_kv.valid,
+                page_table=doc_kv.page_table,
+                k_scale=(None if doc_kv.k_scale is None
+                         else doc_kv.k_scale.reshape(-1, page, 1)),
+                v_scale=(None if doc_kv.v_scale is None
+                         else doc_kv.v_scale.reshape(-1, page, 1)))
+        elif len(doc_kv) == 4:
+            k, v, doc_k_scale, doc_v_scale = doc_kv
+            # raw int8 payload: keep the narrow dtype — the join impl
+            # dequantizes (in-register on pallas)
+            doc_k = k.reshape(b, ld, hkv, dh)
+            doc_v = v.reshape(b, ld, hkv, dh)
+        else:
+            doc_k, doc_v = (a.reshape(b, ld, hkv, dh)
+                            .astype(bcfg.compute_dtype) for a in doc_kv)
     if fused:
         windows = bcfg.layer_windows()[cfg.l:]
         if bcfg.causal or any(w > 0 for w in windows) or bcfg.n_experts:
@@ -325,7 +398,21 @@ def prepare_join(params, cfg: PreTTRConfig, q_reps, q_valid, doc_store,
                 "BERT-style backbones use learned positions)")
     return JoinState(x_q=q_reps.astype(bcfg.compute_dtype), q_valid=q_valid,
                      x_d=x_d, d_valid=doc_valid, doc_k=doc_k, doc_v=doc_v,
-                     fused=fused)
+                     doc_k_scale=doc_k_scale, doc_v_scale=doc_v_scale,
+                     doc_kv_paged=doc_kv_paged, fused=fused)
+
+
+def _unpack_stored_kv(doc_kv):
+    """Unpack a stored-KV operand (``(k, v)`` / ``(k, v, ks, vs)`` /
+    :class:`PagedDocKV`) into the operand set the ``join_attention`` impls
+    take: ``(kd, vd, kd_scale, vd_scale, paged)``."""
+    if isinstance(doc_kv, PagedDocKV):
+        return None, None, None, None, doc_kv
+    if len(doc_kv) == 4:
+        kd, vd, ks, vs = doc_kv
+        return kd, vd, ks, vs, None
+    kd, vd = doc_kv
+    return kd, vd, None, None, None
 
 
 def _join_layer_split(lp, bcfg: T.TransformerConfig, x_q, x_d, q_valid,
@@ -350,13 +437,15 @@ def _join_layer_split(lp, bcfg: T.TransformerConfig, x_q, x_d, q_valid,
     if doc_kv is None:
         kd, vd = T.project_kv(p, h_d, bcfg, positions=pos_d,
                               rope_base=rope_base)
+        kd_scale = vd_scale = paged = None
     else:                      # layer l: index-stored, projections skipped
-        kd, vd = doc_kv
+        kd, vd, kd_scale, vd_scale, paged = _unpack_stored_kv(doc_kv)
     impl = B.get_impl("join_attention", bcfg.attn_impl)
     out = impl(jnp.concatenate([qq, qd], axis=1), kq, vq, kd, vd, cfg=bcfg,
                scale=1.0 / math.sqrt(dh),
                q_valid=jnp.concatenate([q_valid, d_valid], axis=1),
-               kq_valid=q_valid, kd_valid=d_valid)
+               kq_valid=q_valid, kd_valid=d_valid,
+               kd_scale=kd_scale, vd_scale=vd_scale, paged=paged)
 
     def _finish(x, out):
         b, s = x.shape[0], x.shape[1]
@@ -383,12 +472,14 @@ def _cls_only_layer_split(lp, bcfg: T.TransformerConfig, x_q, x_d, q_valid,
     kq, vq = T.project_kv(p, h_q, bcfg, positions=pos_q)
     if doc_kv is None:
         kd, vd = T.project_kv(p, h_d, bcfg, positions=pos_d)
+        kd_scale = vd_scale = paged = None
     else:
-        kd, vd = doc_kv
+        kd, vd, kd_scale, vd_scale, paged = _unpack_stored_kv(doc_kv)
     impl = B.get_impl("join_attention", bcfg.attn_impl)
     out = impl(q, kq, vq, kd, vd, cfg=bcfg, scale=1.0 / math.sqrt(dh),
                q_valid=jnp.ones((b, 1), bool), kq_valid=q_valid,
-               kd_valid=d_valid)
+               kd_valid=d_valid,
+               kd_scale=kd_scale, vd_scale=vd_scale, paged=paged)
     out = out.reshape(b, 1, bcfg.n_heads * dh) @ p["wo"].astype(cd)
     x_cls = x_q[:, :1] + out
     h2 = L.apply_norm(lp["ln2"], x_cls, bcfg.norm)
@@ -409,10 +500,10 @@ def _score_join_fused(params, cfg: PreTTRConfig, st: JoinState):
     last = bcfg.n_layers - (1 if cfg.cls_only_last_layer else 0)
     x_q, x_d = st.x_q, st.x_d
     layers = params["backbone"]["layers"]
+    stored = _stored_kv_operand(st)
     for li in range(cfg.l, last):
         lp = jax.tree.map(lambda a: a[li], layers)
-        dkv = ((st.doc_k, st.doc_v)
-               if li == cfg.l and st.doc_k is not None else None)
+        dkv = stored if li == cfg.l else None
         x_q, x_d = _join_layer_split(lp, bcfg, x_q, x_d, st.q_valid,
                                      st.d_valid, pos_q, pos_d, bases[li],
                                      doc_kv=dkv)
@@ -424,8 +515,7 @@ def _score_join_fused(params, cfg: PreTTRConfig, st: JoinState):
             x_d = maybe_shard(x_d, ("batch", None, "embed_tp"))
     if cfg.cls_only_last_layer:
         lp = jax.tree.map(lambda a: a[-1], layers)
-        dkv = ((st.doc_k, st.doc_v)
-               if cfg.l == last and st.doc_k is not None else None)
+        dkv = stored if cfg.l == last else None
         cls = _cls_only_layer_split(lp, bcfg, x_q, x_d, st.q_valid,
                                     st.d_valid, pos_d, doc_kv=dkv)
     else:
@@ -489,7 +579,10 @@ def join_and_score(params, cfg: PreTTRConfig, q_reps, q_valid, doc_store,
     as separate arrays and attends over the split K/V pair via the
     ``join_attention`` backend op; ``doc_kv`` may supply the index's stored
     layer-``l`` doc K/V streams so layer ``l`` skips all doc-side K/V
-    projections.  ``fused=False`` is the legacy concat path.  Both paths
+    projections — as a dense ``(k, v)`` float pair, a
+    ``(k, v, k_scale, v_scale)`` raw-int8 quadruple, or a
+    :class:`PagedDocKV` cache-pool view (see :func:`prepare_join`).
+    ``fused=False`` is the legacy concat path.  Both paths
     satisfy the equivalence invariant against :func:`rank_forward`; under
     the reference (plain/blocked) backends they are bit-identical to each
     other (tests/test_join_attention.py).

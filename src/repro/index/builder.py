@@ -121,20 +121,39 @@ class IndexBuilder:
     ``layer_k``/``layer_v`` streams, so the fused query-time join skips
     all doc-side K/V projections at layer ``l`` (costs
     ``2 * n_kv_heads * head_dim`` extra stored values per token).
+    ``kv_codec`` (requires ``store_layer_kv``) additionally encodes those
+    K/V streams through a storage codec — ``kv_codec="int8"`` writes raw
+    int8 payload plus per-token fp32 scale streams
+    (``layer_k_scales``/``layer_v_scales``) that serving ships to the
+    device undecoded and the join kernel dequantizes in-register.
     """
 
     def __init__(self, out_dir: str, cfg: P.PreTTRConfig, params, *,
                  codec: str | StorageCodec = "fp16", n_shards: int = 1,
                  batch_size: int = 64, mesh=None, writer_depth: int = 2,
-                 backend: str | None = None, store_layer_kv: bool = False):
+                 backend: str | None = None, store_layer_kv: bool = False,
+                 kv_codec: str | StorageCodec | None = None):
         if backend is not None:
             from repro.models.backend import apply_backend
             cfg = apply_backend(cfg, backend)
         self.codec = get_codec(codec) if isinstance(codec, str) else codec
         # the optional layer-l K/V streams keep the *model's* storage dtype
-        # (they are raw float projections, not codec payload)
+        # (raw float projections) unless a kv_codec re-encodes them
         self.store_layer_kv = bool(store_layer_kv)
-        self._kv_dtype = np.dtype(jnp.dtype(cfg.store_dtype).name)
+        self.kv_codec = (get_codec(kv_codec) if isinstance(kv_codec, str)
+                         else kv_codec)
+        if self.kv_codec is not None and not self.store_layer_kv:
+            raise ValueError("kv_codec requires store_layer_kv=True")
+        if self.kv_codec is not None:
+            # materialize K/V in the codec's encode dtype (full precision
+            # for quantizing codecs); the payload dtype lands in the
+            # manifest so readers size the streams correctly
+            self._kv_dtype = np.dtype(self.kv_codec.encode_dtype)
+            self._kv_payload_dtype = self.kv_codec.stream_group(
+                "layer_k", 1)["layer_k"][0]
+        else:
+            self._kv_dtype = np.dtype(jnp.dtype(cfg.store_dtype).name)
+            self._kv_payload_dtype = self._kv_dtype
         # quantizing codecs encode from full precision; float codecs store
         # the model's own store_dtype bytes unchanged (fp16 stays bit-exact
         # with the in-memory rank_forward round-trip)
@@ -178,7 +197,13 @@ class IndexBuilder:
     def _stream_names(self):
         names = list(self.codec.streams(self.rep_dim))
         if self.store_layer_kv:
-            names += ["layer_k", "layer_v"]
+            if self.kv_codec is not None:
+                names += list(self.kv_codec.stream_group("layer_k",
+                                                         self.kv_dim))
+                names += list(self.kv_codec.stream_group("layer_v",
+                                                         self.kv_dim))
+            else:
+                names += ["layer_k", "layer_v"]
         return names
 
     # -- device side -----------------------------------------------------------
@@ -285,8 +310,10 @@ class IndexBuilder:
                     "encode_batch": self.batch_size,
                     "shards": [w.manifest_row() for w in writers]}
         if self.store_layer_kv:
-            manifest["layer_kv"] = {"dtype": self._kv_dtype.str,
+            manifest["layer_kv"] = {"dtype": self._kv_payload_dtype.str,
                                     "d_kv": self.kv_dim}
+            if self.kv_codec is not None:
+                manifest["layer_kv"]["codec"] = self.kv_codec.name
         with open(os.path.join(self.out_dir, "manifest.msgpack"), "wb") as f:
             f.write(msgpack.packb(manifest))
 
@@ -320,8 +347,14 @@ class IndexBuilder:
                                         side="right") - 1)
             parts = self.codec.encode(reps[i, : int(n)])
             if kv is not None:
-                parts["layer_k"] = kv[0][i, : int(n)]
-                parts["layer_v"] = kv[1][i, : int(n)]
+                if self.kv_codec is not None:
+                    parts.update(self.kv_codec.encode_group(
+                        "layer_k", kv[0][i, : int(n)]))
+                    parts.update(self.kv_codec.encode_group(
+                        "layer_v", kv[1][i, : int(n)]))
+                else:
+                    parts["layer_k"] = kv[0][i, : int(n)]
+                    parts["layer_v"] = kv[1][i, : int(n)]
             writers[shard].append(parts, int(n))
         write_s[0] += time.perf_counter() - t0
 
@@ -352,8 +385,11 @@ def verify_index(index: TermRepIndex, cfg: P.PreTTRConfig, params,
         p, vcfg, codec.decode(parts)))
     parts, got_valid = index.gather_raw([int(i) for i in ids],
                                         pad_to=cfg.max_doc_len)
-    kv_dtype = (np.dtype(index.layer_kv["dtype"])
-                if index.has_layer_kv else None)
+    kv_codec = index.kv_codec
+    kv_dtype = None
+    if index.has_layer_kv:
+        kv_dtype = (np.dtype(kv_codec.encode_dtype) if kv_codec is not None
+                    else np.dtype(index.layer_kv["dtype"]))
     for lo in range(0, len(ids), batch):
         chunk = ids[lo: lo + batch]
         tokens, lengths, valid = pack_doc_batch([docs[i] for i in chunk],
@@ -379,8 +415,14 @@ def verify_index(index: TermRepIndex, cfg: P.PreTTRConfig, params,
             row = lo + i
             want = codec.encode(rep[: int(n_tok)])
             if kv is not None:
-                want["layer_k"] = kv[0][i, : int(n_tok)]
-                want["layer_v"] = kv[1][i, : int(n_tok)]
+                if kv_codec is not None:
+                    want.update(kv_codec.encode_group(
+                        "layer_k", kv[0][i, : int(n_tok)]))
+                    want.update(kv_codec.encode_group(
+                        "layer_v", kv[1][i, : int(n_tok)]))
+                else:
+                    want["layer_k"] = kv[0][i, : int(n_tok)]
+                    want["layer_v"] = kv[1][i, : int(n_tok)]
             for name, arr in want.items():
                 np.testing.assert_array_equal(
                     parts[name][row, : int(n_tok)], arr,

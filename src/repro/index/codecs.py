@@ -69,7 +69,17 @@ def codec_for_v1_dtype(dtype) -> "StorageCodec":
 
 
 class StorageCodec:
-    """Base class: a raw-float passthrough parameterized by ``_dtype``."""
+    """Base class: a raw-float passthrough parameterized by ``_dtype``.
+
+    Beyond the mandatory ``"reps"`` payload, a codec can encode *any* named
+    per-token stream group through the ``*_group`` API — the index uses this
+    to quantize the stored layer-``l`` K/V streams (``layer_k``/``layer_v``)
+    with the same scheme as the reps, each group carrying its own
+    side-channel scale stream.  The scale stream for a group named
+    ``"reps"`` keeps its historical name ``"scales"`` (disk back-compat
+    with pre-existing int8 indexes); any other group gets
+    ``"<name>_scales"``.  The classic ``streams``/``encode``/``decode``
+    trio is the ``"reps"`` specialization of the group API."""
 
     name: str = ""
     _dtype = np.float32
@@ -83,8 +93,22 @@ class StorageCodec:
     def encode_dtype(self):
         return self._dtype
 
+    def scale_stream(self, group: str) -> str | None:
+        """Name of the side-channel scale stream for ``group`` (None for
+        codecs that carry no scales)."""
+        return None
+
+    def stream_group(self, group: str, dim: int) -> dict[str, tuple[np.dtype, tuple]]:
+        return {group: (np.dtype(self._dtype), (dim,))}
+
+    def encode_group(self, group: str, x: np.ndarray) -> dict[str, np.ndarray]:
+        return {group: np.asarray(x, self._dtype)}
+
+    def decode_group(self, group: str, parts):
+        return parts[group]
+
     def streams(self, rep_dim: int) -> dict[str, tuple[np.dtype, tuple]]:
-        return {"reps": (np.dtype(self._dtype), (rep_dim,))}
+        return self.stream_group("reps", rep_dim)
 
     def bytes_per_token(self, rep_dim: int) -> int:
         total = 0
@@ -93,10 +117,10 @@ class StorageCodec:
         return total
 
     def encode(self, x: np.ndarray) -> dict[str, np.ndarray]:
-        return {"reps": np.asarray(x, self._dtype)}
+        return self.encode_group("reps", x)
 
     def decode(self, parts):
-        return parts["reps"]
+        return self.decode_group("reps", parts)
 
 
 @register_codec
@@ -128,16 +152,22 @@ class Int8Codec(StorageCodec):
     def encode_dtype(self):
         return np.float32                 # quantize from full precision
 
-    def streams(self, rep_dim: int) -> dict[str, tuple[np.dtype, tuple]]:
-        return {"reps": (np.dtype(np.int8), (rep_dim,)),
-                "scales": (np.dtype(np.float32), ())}
+    def scale_stream(self, group: str) -> str:
+        # "scales" for the reps group keeps disk back-compat with indexes
+        # written before the group API existed
+        return "scales" if group == "reps" else f"{group}_scales"
 
-    def encode(self, x: np.ndarray) -> dict[str, np.ndarray]:
+    def stream_group(self, group: str, dim: int) -> dict[str, tuple[np.dtype, tuple]]:
+        return {group: (np.dtype(np.int8), (dim,)),
+                self.scale_stream(group): (np.dtype(np.float32), ())}
+
+    def encode_group(self, group: str, x: np.ndarray) -> dict[str, np.ndarray]:
         x = np.asarray(x, np.float32)
         scales = np.maximum(np.max(np.abs(x), axis=-1), 1e-12) / 127.0
         q = np.clip(np.rint(x / scales[..., None]), -127, 127).astype(np.int8)
-        return {"reps": q, "scales": scales.astype(np.float32)}
+        return {group: q, self.scale_stream(group): scales.astype(np.float32)}
 
-    def decode(self, parts):
+    def decode_group(self, group: str, parts):
         # works on numpy and on jnp tracers: astype + broadcast only
-        return parts["reps"].astype(np.float32) * parts["scales"][..., None]
+        return (parts[group].astype(np.float32)
+                * parts[self.scale_stream(group)][..., None])

@@ -32,6 +32,12 @@ config's storage dtype; the fused query-time join consumes them directly
 and skips all doc-side K/V projections at layer ``l``.  The manifest
 records them under ``layer_kv`` (``{"dtype", "d_kv"}``); indexes without
 the entry (including every v1 index) simply don't expose the streams.
+An index built with ``IndexBuilder(kv_codec="int8")`` additionally records
+``layer_kv["codec"]`` and stores the K/V pair *codec-encoded* — raw int8
+payload plus per-token fp32 scale streams (``layer_k_scales.bin`` /
+``layer_v_scales.bin``), which serving ships to the device undecoded and
+the join kernel dequantizes in-register.  Manifests without the key keep
+raw-dtype K/V streams, so pre-existing indexes read unchanged.
 
 Storage accounting mirrors §6.2 through :meth:`bytes_per_token`: the
 codec's per-token bytes (``codec.bytes_per_token(rep_dim)``) **plus**
@@ -103,7 +109,8 @@ class TermRepIndex:
         self.compressed = compressed
         self.max_doc_len = max_doc_len
         # optional layer-l doc K/V streams: {"dtype": np-dtype-str,
-        # "d_kv": n_kv_heads * head_dim} (v2 manifests only)
+        # "d_kv": n_kv_heads * head_dim[, "codec": codec name]}
+        # (v2 manifests only)
         self.layer_kv = dict(layer_kv) if layer_kv else None
         self.version = 1                             # v2 set by open()
         self.encode_batch = 0                        # v2 build batch shape
@@ -205,8 +212,11 @@ class TermRepIndex:
             codec = get_codec(mani["codec"])
             layer_kv = mani.get("layer_kv") or None
             if layer_kv is not None:
-                layer_kv = {"dtype": np.dtype(layer_kv["dtype"]).str,
-                            "d_kv": int(layer_kv["d_kv"])}
+                norm = {"dtype": np.dtype(layer_kv["dtype"]).str,
+                        "d_kv": int(layer_kv["d_kv"])}
+                if layer_kv.get("codec"):
+                    norm["codec"] = str(layer_kv["codec"])
+                layer_kv = norm
             idx = cls(path, mani["rep_dim"],
                       codec.streams(mani["rep_dim"])["reps"][0].str,
                       mani["l"], mani["compressed"], mani["max_doc_len"],
@@ -268,25 +278,40 @@ class TermRepIndex:
         """Per-token width of each stored K/V stream (0 when absent)."""
         return int(self.layer_kv["d_kv"]) if self.layer_kv else 0
 
+    @property
+    def kv_codec(self):
+        """Codec the layer-``l`` K/V streams are encoded with, or None for
+        raw-dtype (or absent) K/V streams."""
+        if self.layer_kv and self.layer_kv.get("codec"):
+            return get_codec(self.layer_kv["codec"])
+        return None
+
+    def kv_streams_spec(self) -> dict:
+        """Streams of the layer-``l`` K/V pair only (empty dict when the
+        index carries none): raw ``layer_k``/``layer_v`` rows, or the KV
+        codec's payload + scale stream groups."""
+        if not self.layer_kv:
+            return {}
+        d_kv = int(self.layer_kv["d_kv"])
+        kvc = self.kv_codec
+        if kvc is not None:
+            return {**kvc.stream_group("layer_k", d_kv),
+                    **kvc.stream_group("layer_v", d_kv)}
+        dt = np.dtype(self.layer_kv["dtype"])
+        return {"layer_k": (dt, (d_kv,)), "layer_v": (dt, (d_kv,))}
+
     def streams_spec(self) -> dict:
         """All per-token streams of this index: the codec's plus, when
-        present, the layer-``l`` K/V pair -> ``{name: (dtype, row_shape)}``."""
-        spec = dict(self.codec.streams(self.rep_dim))
-        if self.layer_kv:
-            dt = np.dtype(self.layer_kv["dtype"])
-            d_kv = int(self.layer_kv["d_kv"])
-            spec["layer_k"] = (dt, (d_kv,))
-            spec["layer_v"] = (dt, (d_kv,))
-        return spec
+        present, the layer-``l`` K/V group -> ``{name: (dtype, row_shape)}``."""
+        return {**self.codec.streams(self.rep_dim), **self.kv_streams_spec()}
 
     def bytes_per_token(self) -> int:
         """Stored bytes per token over *all* streams: the codec's
-        ``bytes_per_token(rep_dim)`` plus ``2 * d_kv * itemsize`` for the
-        optional layer-``l`` K/V pair (§6.2 accounting)."""
+        ``bytes_per_token(rep_dim)`` plus the layer-``l`` K/V group's rows
+        (raw floats, or int8 payload + fp32 scales) — §6.2 accounting."""
         total = self.codec.bytes_per_token(self.rep_dim)
-        if self.layer_kv:
-            dt = np.dtype(self.layer_kv["dtype"])
-            total += 2 * int(self.layer_kv["d_kv"]) * dt.itemsize
+        for dt, shape in self.kv_streams_spec().values():
+            total += dt.itemsize * int(np.prod(shape, dtype=np.int64))
         return total
 
     @property

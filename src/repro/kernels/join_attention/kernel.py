@@ -19,6 +19,23 @@ index maps (head ``h`` reads KV head ``h * Hkv // Hq``).
 The join layers are mask-free apart from validity (no causal / window /
 split structure — the split mask only exists *below* layer ``l``), so the
 only skip predicate is the per-row valid doc length (scalar-prefetched).
+
+Two orthogonal extensions serve the index-fed doc segment:
+
+* **In-register int8 dequantization** (``dequant=True``): ``kd``/``vd``
+  arrive as raw int8 codec payload plus per-token fp32 scales; each KV
+  tile is widened *in registers* (``int8 -> f32 * scale``) right before
+  its dot — the standalone decode dispatch disappears and the doc-side
+  HBM read shrinks to the 1-byte payload.  Dequantizing the rows before
+  the dot (rather than folding scales into scores/probabilities) keeps
+  the kernel bit-exact against decode-then-attend.
+* **Paged doc segment** (``paged=True``): the doc K/V live in fixed-size
+  token-page pools ``[P, page, Hkv, D]`` (the device doc cache's layout)
+  and a scalar-prefetched page table ``[B, nP]`` maps each (row, tile) to
+  its pool page — the doc-segment index maps walk the page table, so a
+  batch is scored straight out of the cache pools without materializing
+  a per-batch dense copy.  Page validity rides a ``[P, page]`` pool the
+  same way.
 """
 from __future__ import annotations
 
@@ -33,9 +50,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _join_kernel(dlen_ref, q_ref, kq_ref, vq_ref, kd_ref, vd_ref,
-                 qval_ref, dval_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                 block_k: int, scale: float):
+def _join_kernel(dlen_ref, *refs, block_k: int, scale: float,
+                 dequant: bool, paged: bool):
+    q_ref, kq_ref, vq_ref, kd_ref, vd_ref = refs[:5]
+    i = 5
+    if dequant:
+        kds_ref, vds_ref = refs[i:i + 2]
+        i += 2
+    qval_ref, dval_ref, o_ref, m_scr, l_scr, acc_scr = refs[i:]
+
     b = pl.program_id(0)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -62,8 +85,19 @@ def _join_kernel(dlen_ref, q_ref, kq_ref, vq_ref, kd_ref, vd_ref,
     @pl.when(dlen_ref[b] > k0)                         # doc tile beyond length
     def _doc_tile():
         q = q_ref[0, 0].astype(jnp.float32)
-        kd = kd_ref[0, 0].astype(jnp.float32)          # [bk, D]
-        vd = vd_ref[0, 0].astype(jnp.float32)
+        if paged:                                      # pool page [page, D]
+            kd = kd_ref[0, :, 0].astype(jnp.float32)
+            vd = vd_ref[0, :, 0].astype(jnp.float32)
+        else:                                          # dense tile [bk, D]
+            kd = kd_ref[0, 0].astype(jnp.float32)
+            vd = vd_ref[0, 0].astype(jnp.float32)
+        if dequant:
+            # widen the raw int8 rows in registers: per-token fp32 scales
+            # arrive as a [bk, 1] column, broadcasting over D — identical
+            # elementwise math to a standalone decode dispatch, so the
+            # fused path is bit-exact against decode-then-attend
+            kd = kd * kds_ref[0]
+            vd = vd * vds_ref[0]
         s = jax.lax.dot_general(q, kd, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -85,40 +119,66 @@ def _join_kernel(dlen_ref, q_ref, kq_ref, vq_ref, kd_ref, vd_ref,
         o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
+def _paged_shim(pt_ref, dlen_ref, *refs, block_k, scale, dequant):
+    # paged variant scalar-prefetches (page_table, dlen); the page table is
+    # only consumed by the BlockSpec index maps, never by the body
+    del pt_ref
+    _join_kernel(dlen_ref, *refs, block_k=block_k, scale=scale,
+                 dequant=dequant, paged=True)
+
+
 def join_attention_pallas(q, kq, vq, kd, vd, dlen, kq_valid, kd_valid, *,
-                          block_q: int, block_k: int, interpret: bool):
+                          block_q: int, block_k: int, interpret: bool,
+                          kd_scales=None, vd_scales=None):
     """q: [B, Hq, Sq, D]; kq, vq: [B, Hkv, Lq, D]; kd, vd: [B, Hkv, Ld, D];
     dlen: [B] i32 (doc-segment tile-skip bound, covering every valid doc
     index); kq_valid: [B, Lq] i32; kd_valid: [B, Ld] i32.  Sq/Ld must be
-    multiples of block_q/block_k and Lq a sublane multiple (ops.py pads)."""
+    multiples of block_q/block_k and Lq a sublane multiple (ops.py pads).
+
+    ``kd_scales``/``vd_scales`` (optional, both or neither): per-token fp32
+    dequant scales [B, Ld, 1] for raw-int8 ``kd``/``vd`` — the KV tiles are
+    widened in registers inside the doc-segment loop."""
     b, hq, sq, d = q.shape
     hkv, lq = kq.shape[1], kq.shape[2]
     ld = kd.shape[2]
     assert sq % block_q == 0 and ld % block_k == 0
+    dequant = kd_scales is not None
     n_rep = hq // hkv
     scale = 1.0 / math.sqrt(d)
 
-    kern = functools.partial(_join_kernel, block_k=block_k, scale=scale)
+    kern = functools.partial(_join_kernel, block_k=block_k, scale=scale,
+                             dequant=dequant, paged=False)
     grid = (b, hq, sq // block_q, ld // block_k)
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, iq, ik, L: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, lq, d),
+                     lambda b, h, iq, ik, L: (b, h // n_rep, 0, 0)),
+        pl.BlockSpec((1, 1, lq, d),
+                     lambda b, h, iq, ik, L: (b, h // n_rep, 0, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
+    ]
+    operands = [q, kq, vq, kd, vd]
+    if dequant:
+        in_specs += [
+            pl.BlockSpec((1, block_k, 1), lambda b, h, iq, ik, L: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, 1), lambda b, h, iq, ik, L: (b, ik, 0)),
+        ]
+        operands += [kd_scales, vd_scales]
+    in_specs += [
+        pl.BlockSpec((1, lq), lambda b, h, iq, ik, L: (b, 0)),
+        pl.BlockSpec((1, block_k), lambda b, h, iq, ik, L: (b, ik)),
+    ]
+    operands += [kq_valid, kd_valid]
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, block_q, d),
-                             lambda b, h, iq, ik, L: (b, h, iq, 0)),
-                pl.BlockSpec((1, 1, lq, d),
-                             lambda b, h, iq, ik, L: (b, h // n_rep, 0, 0)),
-                pl.BlockSpec((1, 1, lq, d),
-                             lambda b, h, iq, ik, L: (b, h // n_rep, 0, 0)),
-                pl.BlockSpec((1, 1, block_k, d),
-                             lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
-                pl.BlockSpec((1, 1, block_k, d),
-                             lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
-                pl.BlockSpec((1, lq), lambda b, h, iq, ik, L: (b, 0)),
-                pl.BlockSpec((1, block_k), lambda b, h, iq, ik, L: (b, ik)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, block_q, d),
                                    lambda b, h, iq, ik, L: (b, h, iq, 0)),
             scratch_shapes=[
@@ -129,4 +189,81 @@ def join_attention_pallas(q, kq, vq, kd, vd, dlen, kq_valid, kd_valid, *,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
         interpret=interpret,
-    )(dlen, q, kq, vq, kd, vd, kq_valid, kd_valid)
+    )(dlen, *operands)
+
+
+def join_attention_pallas_paged(q, kq, vq, kd_pages, vd_pages, page_table,
+                                dlen, kq_valid, dval_pages, *,
+                                block_q: int, interpret: bool,
+                                kd_scale_pages=None, vd_scale_pages=None):
+    """Paged doc segment: the doc K/V stay in the device cache's page pools
+    and the doc-segment index maps walk the scalar-prefetched page table.
+
+    q: [B, Hq, Sq, D]; kq, vq: [B, Hkv, Lq, D];
+    kd_pages, vd_pages: [P, page, Hkv, D] token-page pools;
+    page_table: [B, nP] i32 pool page per (row, doc tile) — tail entries
+    point at the cache's all-zero page and are masked by ``dlen``;
+    dlen: [B] i32 valid length of the assembled doc row;
+    dval_pages: [P, page] i32 page-resident validity pool;
+    kd_scale_pages / vd_scale_pages: optional [P, page, 1] fp32 per-token
+    dequant scale pools for raw-int8 KV pools.
+
+    The doc tile size is the page size (a sublane multiple — the cache
+    rounds it up); Sq must be a multiple of block_q (ops.py pads).
+    Returns [B, Hq, Sq, D] with the doc segment of length nP * page."""
+    b, hq, sq, d = q.shape
+    hkv, lq = kq.shape[1], kq.shape[2]
+    page = kd_pages.shape[1]
+    n_pages = page_table.shape[1]
+    assert sq % block_q == 0
+    dequant = kd_scale_pages is not None
+    n_rep = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    kern = functools.partial(_paged_shim, block_k=page, scale=scale,
+                             dequant=dequant)
+    grid = (b, hq, sq // block_q, n_pages)
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, iq, ik, pt, L: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, lq, d),
+                     lambda b, h, iq, ik, pt, L: (b, h // n_rep, 0, 0)),
+        pl.BlockSpec((1, 1, lq, d),
+                     lambda b, h, iq, ik, pt, L: (b, h // n_rep, 0, 0)),
+        # the page-table walk: tile ik of row b reads pool page pt[b, ik]
+        pl.BlockSpec((1, page, 1, d),
+                     lambda b, h, iq, ik, pt, L: (pt[b, ik], 0, h // n_rep, 0)),
+        pl.BlockSpec((1, page, 1, d),
+                     lambda b, h, iq, ik, pt, L: (pt[b, ik], 0, h // n_rep, 0)),
+    ]
+    operands = [q, kq, vq, kd_pages, vd_pages]
+    if dequant:
+        in_specs += [
+            pl.BlockSpec((1, page, 1),
+                         lambda b, h, iq, ik, pt, L: (pt[b, ik], 0, 0)),
+            pl.BlockSpec((1, page, 1),
+                         lambda b, h, iq, ik, pt, L: (pt[b, ik], 0, 0)),
+        ]
+        operands += [kd_scale_pages, vd_scale_pages]
+    in_specs += [
+        pl.BlockSpec((1, lq), lambda b, h, iq, ik, pt, L: (b, 0)),
+        pl.BlockSpec((1, page), lambda b, h, iq, ik, pt, L: (pt[b, ik], 0)),
+    ]
+    operands += [kq_valid, dval_pages]
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, block_q, d),
+                                   lambda b, h, iq, ik, pt, L: (b, h, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        interpret=interpret,
+    )(page_table, dlen, *operands)

@@ -1,4 +1,6 @@
-"""Pure-jnp oracle for split-KV join attention."""
+"""Pure-jnp oracles for split-KV join attention, including the
+separate-dispatch decode reference for the int8 path and the
+densify-then-attend reference for the paged path."""
 from __future__ import annotations
 
 import math
@@ -31,3 +33,49 @@ def join_attention_ref(q, kq, vq, kd, vd, kq_valid=None, kd_valid=None):
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)) \
         .astype(q.dtype)
+
+
+def dequantize_kv(x_q, scales):
+    """Separate-dispatch decode reference: widen raw-int8 K or V rows with
+    per-token fp32 scales.  x_q: [B, Hkv, Ld, D] int8; scales: [B, Ld] f32.
+    Same elementwise math as the in-kernel dequant."""
+    return x_q.astype(jnp.float32) * scales.astype(jnp.float32)[:, None, :, None]
+
+
+def join_attention_ref_quant(q, kq, vq, kd_q, vd_q, kd_scales, vd_scales,
+                             kq_valid=None, kd_valid=None):
+    """Decode-then-attend oracle for the int8 doc segment: dequantize the
+    raw K/V with per-token scales (the separate-dispatch reference), then
+    run the fp32 oracle."""
+    return join_attention_ref(q, kq, vq,
+                              dequantize_kv(kd_q, kd_scales),
+                              dequantize_kv(vd_q, vd_scales),
+                              kq_valid=kq_valid, kd_valid=kd_valid)
+
+
+def pages_to_dense(pages, page_table):
+    """Densify token-page pools via a page table.
+    pages: [P, page, ...]; page_table: [B, nP] i32.
+    Returns [B, nP * page, ...] in assembled row order."""
+    g = pages[page_table]
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def join_attention_ref_paged(q, kq, vq, kd_pages, vd_pages, page_table,
+                             dval_pages, kq_valid=None,
+                             kd_scale_pages=None, vd_scale_pages=None):
+    """Densify-then-attend oracle for the paged doc segment: gather pages
+    into dense [B, Ld, Hkv, D] rows, optionally dequantize, then run the
+    fp32 oracle.  Pool layouts match the paged kernel
+    ([P, page, Hkv, D] KV, [P, page] validity, [P, page, 1] scales)."""
+    kd = jnp.moveaxis(pages_to_dense(kd_pages, page_table), 2, 1)
+    vd = jnp.moveaxis(pages_to_dense(vd_pages, page_table), 2, 1)
+    kd_valid = pages_to_dense(dval_pages, page_table)
+    if kd_scale_pages is not None:
+        kd_scales = pages_to_dense(kd_scale_pages, page_table)[..., 0]
+        vd_scales = pages_to_dense(vd_scale_pages, page_table)[..., 0]
+        return join_attention_ref_quant(q, kq, vq, kd, vd, kd_scales,
+                                        vd_scales, kq_valid=kq_valid,
+                                        kd_valid=kd_valid)
+    return join_attention_ref(q, kq, vq, kd, vd, kq_valid=kq_valid,
+                              kd_valid=kd_valid)

@@ -27,10 +27,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _attn_kernel(lengths_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
-                 m_scr, l_scr, acc_scr, *,
-                 block_q: int, block_k: int, causal: bool, window: int,
-                 seg_boundary: int, scale: float):
+def _attn_kernel(lengths_ref, *refs, block_q: int, block_k: int,
+                 causal: bool, window: int, seg_boundary: int, scale: float,
+                 dequant: bool):
+    q_ref, k_ref, v_ref = refs[:3]
+    i = 3
+    if dequant:
+        ks_ref, vs_ref = refs[i:i + 2]
+        i += 2
+    valid_ref, o_ref, m_scr, l_scr, acc_scr = refs[i:]
     b = pl.program_id(0)
     iq = pl.program_id(2)
     ik = pl.program_id(3)
@@ -66,6 +71,12 @@ def _attn_kernel(lengths_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)            # [bq, D]
         k = k_ref[0, 0].astype(jnp.float32)            # [bk, D]
         v = v_ref[0, 0].astype(jnp.float32)
+        if dequant:
+            # raw int8 K/V widened in registers: per-token fp32 scales as a
+            # [bk, 1] column broadcasting over D — bit-exact against a
+            # standalone decode dispatch followed by this kernel
+            k = k * ks_ref[0]
+            v = v * vs_ref[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
 
@@ -97,38 +108,54 @@ def _attn_kernel(lengths_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
 
 def flash_attention_pallas(q, k, v, lengths, k_valid, *, causal: bool,
                            window: int, seg_boundary: int, block_q: int,
-                           block_k: int, interpret: bool):
+                           block_k: int, interpret: bool,
+                           k_scales=None, v_scales=None):
     """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B] i32;
     k_valid: [B, Skv] i32 (0 = masked — supports non-prefix validity, e.g.
     PreTTR's padded-query + padded-doc two-prefix pattern; ``lengths`` stays
     the tile-skip bound and must cover every valid index).
+    ``k_scales``/``v_scales`` (optional, both or neither): [B, Skv, 1] fp32
+    per-token dequant scales for raw-int8 ``k``/``v``, widened in registers
+    inside the tiled KV loop.
     Sq/Skv must be multiples of block_q/block_k (ops.py pads)."""
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     assert sq % block_q == 0 and skv % block_k == 0
+    dequant = k_scales is not None
     n_rep = hq // hkv
     scale = 1.0 / math.sqrt(d)
 
     kern = functools.partial(
         _attn_kernel, block_q=block_q, block_k=block_k, causal=causal,
-        window=window, seg_boundary=seg_boundary, scale=scale)
+        window=window, seg_boundary=seg_boundary, scale=scale,
+        dequant=dequant)
 
     grid = (b, hq, sq // block_q, skv // block_k)
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, iq, ik, L: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
+    ]
+    operands = [q, k, v]
+    if dequant:
+        in_specs += [
+            pl.BlockSpec((1, block_k, 1), lambda b, h, iq, ik, L: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, 1), lambda b, h, iq, ik, L: (b, ik, 0)),
+        ]
+        operands += [k_scales, v_scales]
+    in_specs += [
+        pl.BlockSpec((1, block_k), lambda b, h, iq, ik, L: (b, ik)),
+    ]
+    operands += [k_valid]
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, block_q, d),
-                             lambda b, h, iq, ik, L: (b, h, iq, 0)),
-                pl.BlockSpec((1, 1, block_k, d),
-                             lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
-                pl.BlockSpec((1, 1, block_k, d),
-                             lambda b, h, iq, ik, L: (b, h // n_rep, ik, 0)),
-                pl.BlockSpec((1, block_k),
-                             lambda b, h, iq, ik, L: (b, ik)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, block_q, d),
                                    lambda b, h, iq, ik, L: (b, h, iq, 0)),
             scratch_shapes=[
@@ -139,4 +166,4 @@ def flash_attention_pallas(q, k, v, lengths, k_valid, *, causal: bool,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
         interpret=interpret,
-    )(lengths, q, k, v, k_valid)
+    )(lengths, *operands)

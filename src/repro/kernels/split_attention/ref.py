@@ -9,12 +9,18 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def split_attention_ref(q, k, v, lengths, k_valid=None, *,
+def split_attention_ref(q, k, v, lengths, k_valid=None,
+                        k_scales=None, v_scales=None, *,
                         causal: bool = False,
                         window: int = -1, seg_boundary: int = -1):
     """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; lengths: [B]; k_valid:
-    optional [B, Skv] boolean (non-prefix validity).
+    optional [B, Skv] boolean (non-prefix validity); k_scales/v_scales:
+    optional [B, Skv] fp32 per-token dequant scales for raw-int8 k/v (the
+    separate-dispatch decode reference for the fused-dequant kernel).
     Returns [B, Hq, Sq, D]."""
+    if k_scales is not None:
+        k = k.astype(jnp.float32) * k_scales.astype(jnp.float32)[:, None, :, None]
+        v = v.astype(jnp.float32) * v_scales.astype(jnp.float32)[:, None, :, None]
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     n_rep = hq // hkv

@@ -68,10 +68,22 @@ def main() -> None:
                     help="store the join layer's doc-side K/V streams in "
                          "the built index (fused join skips the layer-l "
                          "doc projections)")
+    ap.add_argument("--kv-codec", default=None,
+                    help="codec for the stored layer-l K/V streams "
+                         "(requires --store-layer-kv; int8 dequantizes "
+                         "in-register inside the join kernel)")
     ap.add_argument("--doc-cache-mb", type=float, default=0.0,
                     help="--service: device-resident hot-doc LRU cache "
                          "budget in MiB (0 = off); cache hits skip index "
-                         "gather, H2D and codec decode")
+                         "gather and H2D (raw stored bytes decode inside "
+                         "the scoring jit)")
+    ap.add_argument("--doc-cache-page", type=int, default=None,
+                    help="--service: doc-cache page size in tokens "
+                         "(default: whole-doc slots); small pages pack "
+                         "variable-length docs tighter")
+    ap.add_argument("--doc-cache-bucket", action="store_true",
+                    help="--service: shrink each batch's page-table width "
+                         "to its longest doc (bucketed powers of two)")
     ap.add_argument("--legacy-join", action="store_true",
                     help="--service: score through the legacy concat join "
                          "instead of the fused split-KV path")
@@ -98,7 +110,8 @@ def main() -> None:
                                codec=args.codec, n_shards=args.shards,
                                batch_size=args.index_batch,
                                backend=args.backend,
-                               store_layer_kv=args.store_layer_kv)
+                               store_layer_kv=args.store_layer_kv,
+                               kv_codec=args.kv_codec)
         report = builder.build(list(world.docs))
         idx = TermRepIndex.open(args.index_dir)
         e = cfg.compress_dim or cfg.backbone.d_model
@@ -114,7 +127,9 @@ def main() -> None:
     if args.service:
         svc = RankingService(params, cfg, idx, micro_batch=args.micro_batch,
                              fused=not args.legacy_join,
-                             doc_cache_mb=args.doc_cache_mb)
+                             doc_cache_mb=args.doc_cache_mb,
+                             page_tokens=args.doc_cache_page,
+                             page_bucket=args.doc_cache_bucket)
         # warm the jit caches (encode + the packed join shape) off the clock
         q0, qv0 = pack_query(world.queries[0], cfg.max_query_len)
         svc.rank(q0, qv0, list(world.candidates(0, k=args.candidates)),
@@ -136,14 +151,18 @@ def main() -> None:
         wall = time.perf_counter() - t0
         p50, p99 = np.percentile(lat_s, [50, 99])
         s = svc.stats
-        cache_note = (f" doc_cache_hit={s.doc_cache_hit_rate:.2f}"
+        cache_note = (f" doc_cache_hit={s.doc_cache_hit_rate:.2f} "
+                      f"resident_docs={s.resident_docs}"
                       if svc.doc_cache is not None else "")
         print(f"[serve] service mode: {len(lat_s)} queries x "
               f"{args.candidates} candidates, concurrency={args.concurrency}"
               f" | QPS={len(lat_s)/wall:.2f} p50={p50*1e3:.1f}ms "
               f"p99={p99*1e3:.1f}ms | batches={s.n_batches} "
               f"pack_fill={s.pack_fill:.2f} "
-              f"join_dispatch={s.n_join_dispatch}{cache_note} | "
+              f"join_dispatch={s.n_join_dispatch} "
+              f"decode_dispatch={s.n_decode_dispatch} "
+              f"h2d={s.h2d_bytes / 2**20:.2f}MiB "
+              f"doc_hbm={s.doc_hbm_bytes / 2**20:.2f}MiB{cache_note} | "
               f"P@20={np.mean(p20):.3f}")
         return
 

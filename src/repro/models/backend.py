@@ -26,14 +26,25 @@ Kinds and their call contracts (all arrays in **model layout**):
   One query row against a full K/V sequence: the transformer decode step
   and the PreTTR CLS-only final layer (paper §6.3).
 * ``join_attention(q, kq, vq, kd, vd, *, cfg, scale, q_valid, kq_valid,
-  kd_valid)`` — q ``[B, Sq, Hq, D]``; kq, vq ``[B, Lq, Hkv, D]`` (the
-  freshly-encoded query segment); kd, vd ``[B, Ld, Hkv, D]`` (index-loaded
-  doc segment).  Attention over the *union* of the two K/V segments —
-  PreTTR's query-time join layers (``l..n-1``), which are bidirectional
-  and validity-masked only.  The reference impls concatenate the segments
-  and reuse the regular attention cores (so the fused join path stays
-  bit-exact with the legacy concat path); the ``pallas`` impl is the
-  split-KV flash kernel, which never materializes the concatenation.
+  kd_valid, kd_scale, vd_scale, paged)`` — q ``[B, Sq, Hq, D]``; kq, vq
+  ``[B, Lq, Hkv, D]`` (the freshly-encoded query segment); kd, vd
+  ``[B, Ld, Hkv, D]`` (index-loaded doc segment).  Attention over the
+  *union* of the two K/V segments — PreTTR's query-time join layers
+  (``l..n-1``), which are bidirectional and validity-masked only.  The
+  reference impls concatenate the segments and reuse the regular attention
+  cores (so the fused join path stays bit-exact with the legacy concat
+  path); the ``pallas`` impl is the split-KV flash kernel, which never
+  materializes the concatenation.  Two optional doc-segment forms:
+  ``kd_scale``/``vd_scale`` (``[B, Ld]`` fp32, both or neither) mark
+  ``kd``/``vd`` as raw int8 codec payload dequantized on the fly (the
+  reference impls widen before the concat, the pallas impl dequantizes
+  in-register inside the KV tile loop); ``paged`` (an object with
+  ``k``/``v`` ``[P, page, Hkv, D]`` pools, ``page_table`` ``[B, nP]``,
+  ``valid`` ``[P, page]``, optional ``k_scale``/``v_scale``
+  ``[P, page, 1]`` — ``repro.core.prettr.PagedDocKV``) replaces ``kd``/
+  ``vd`` entirely with the device doc cache's token-page pools: the
+  reference impls gather the pages into dense rows in-jit, the pallas
+  impl walks the page table in its index maps.
 * ``compress(params, x, *, store_dtype)`` / ``decompress(params, r, *,
   compute_dtype)`` — the paper's d->e->d bottleneck (§4.2).
 
@@ -69,7 +80,8 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention import flash_decode_attention
 from repro.kernels.fused_compress import fused_compress, fused_decompress
-from repro.kernels.join_attention import join_flash_attention
+from repro.kernels.join_attention import (join_flash_attention,
+                                          join_flash_attention_paged)
 from repro.kernels.split_attention import split_flash_attention
 from repro.models import layers as L
 
@@ -149,7 +161,13 @@ def validate_config(attn_impl: str, compress_impl: str) -> None:
     so a typo cannot silently fall through to a default branch).  Each knob
     dispatches two kinds (attention+decode, compress+decompress), so both
     registries must know the name — a half-registered extension would
-    otherwise fail deep inside a jit trace."""
+    otherwise fail deep inside a jit trace.  The join_attention impl must
+    additionally accept the quantized/paged doc-segment operands
+    (``kd_scale``/``vd_scale``/``paged``) — serving hands every impl the
+    same operand set, so a third-party impl missing them would fail on the
+    first int8 or paged-cache batch."""
+    import inspect
+
     for kind, name in (("attention", attn_impl),
                        ("decode_attention", attn_impl),
                        ("join_attention", attn_impl)):
@@ -157,6 +175,17 @@ def validate_config(attn_impl: str, compress_impl: str) -> None:
             raise ValueError(
                 f"unknown attn_impl {name!r} (no {kind} registration); "
                 f"available: {available(kind)}")
+    join_fn = _REGISTRY["join_attention"][attn_impl]
+    params = inspect.signature(join_fn).parameters
+    has_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                     for p in params.values())
+    missing = [kw for kw in ("kd_scale", "vd_scale", "paged")
+               if kw not in params]
+    if missing and not has_var_kw:
+        raise ValueError(
+            f"join_attention impl {attn_impl!r} does not accept the "
+            f"quantized/paged doc-segment keywords {missing}; every join "
+            f"impl must take kd_scale/vd_scale/paged (or **kwargs)")
     for kind, name in (("compress", compress_impl),
                        ("decompress", compress_impl)):
         if name not in _REGISTRY[kind]:
@@ -263,6 +292,42 @@ def _concat_join_operands(q, kq, vq, kd, vd, kq_valid, kd_valid):
     return k, v, k_valid
 
 
+def _pages_to_rows(pool, page_table):
+    """[P, page, ...] pool + [B, nP] table -> [B, nP * page, ...] rows."""
+    g = pool[page_table]
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def _densify_paged(paged, kd_valid):
+    """Reference-impl form of the paged doc segment: gather the cache's
+    token pages into dense ``[B, Ld, Hkv, D]`` rows (inside the caller's
+    jit), sliced to the caller's dense doc length so the concat cores see
+    exactly the shapes the slot-cache path fed them — which is what keeps
+    paged scores bit-exact vs the slot cache on float KV."""
+    ld = kd_valid.shape[1] if kd_valid is not None else None
+    kd = _pages_to_rows(paged.k, paged.page_table)[:, :ld]
+    vd = _pages_to_rows(paged.v, paged.page_table)[:, :ld]
+    kd_scale = vd_scale = None
+    if paged.k_scale is not None:
+        kd_scale = _pages_to_rows(paged.k_scale, paged.page_table)[:, :ld, 0]
+        vd_scale = _pages_to_rows(paged.v_scale, paged.page_table)[:, :ld, 0]
+    return kd, vd, kd_scale, vd_scale
+
+
+def _dequant_kv(kd, vd, kd_scale, vd_scale, cfg):
+    """Widen raw-int8 doc K/V with per-token fp32 scales — the same
+    elementwise math as a standalone codec-decode dispatch followed by
+    ``prepare_join``'s compute-dtype cast, so the reference impls stay
+    bit-exact with decode-then-attend."""
+    kd = (kd.astype(jnp.float32)
+          * kd_scale.astype(jnp.float32)[..., None, None]) \
+        .astype(cfg.compute_dtype)
+    vd = (vd.astype(jnp.float32)
+          * vd_scale.astype(jnp.float32)[..., None, None]) \
+        .astype(cfg.compute_dtype)
+    return kd, vd
+
+
 def _join_decode_row(q, k, v, k_valid, *, scale):
     """Single-row join (the CLS-only final layer) through the decode core —
     the same reference the legacy path's ``decode_attention`` dispatch
@@ -276,11 +341,18 @@ def _join_decode_row(q, k, v, k_valid, *, scale):
 
 @register("join_attention", "plain")
 def _join_plain(q, kq, vq, kd, vd, *, cfg, scale, q_valid=None,
-                kq_valid=None, kd_valid=None):
+                kq_valid=None, kd_valid=None, kd_scale=None, vd_scale=None,
+                paged=None):
     # reference semantics == the legacy concat path: concatenate the K/V
     # segments (bitwise-neutral) and run the same plain core on the same
     # shapes, so fused-vs-concat stays bit-exact under this impl
     b, sq = q.shape[0], q.shape[1]
+    if paged is not None:
+        kd, vd, kd_scale, vd_scale = _densify_paged(paged, kd_valid)
+        if kd_scale is None:        # float pools: slot-path dtype parity
+            kd, vd = kd.astype(cfg.compute_dtype), vd.astype(cfg.compute_dtype)
+    if kd_scale is not None:
+        kd, vd = _dequant_kv(kd, vd, kd_scale, vd_scale, cfg)
     k, v, k_valid = _concat_join_operands(q, kq, vq, kd, vd,
                                           kq_valid, kd_valid)
     if sq == 1:
@@ -293,9 +365,16 @@ def _join_plain(q, kq, vq, kd, vd, *, cfg, scale, q_valid=None,
 
 @register("join_attention", "blocked")
 def _join_blocked(q, kq, vq, kd, vd, *, cfg, scale, q_valid=None,
-                  kq_valid=None, kd_valid=None):
+                  kq_valid=None, kd_valid=None, kd_scale=None, vd_scale=None,
+                  paged=None):
     del q_valid                       # parity with the blocked legacy impl
     b, sq = q.shape[0], q.shape[1]
+    if paged is not None:
+        kd, vd, kd_scale, vd_scale = _densify_paged(paged, kd_valid)
+        if kd_scale is None:        # float pools: slot-path dtype parity
+            kd, vd = kd.astype(cfg.compute_dtype), vd.astype(cfg.compute_dtype)
+    if kd_scale is not None:
+        kd, vd = _dequant_kv(kd, vd, kd_scale, vd_scale, cfg)
     k, v, k_valid = _concat_join_operands(q, kq, vq, kd, vd,
                                           kq_valid, kd_valid)
     if sq == 1:                       # "blocked" decode == the jnp reference
@@ -310,13 +389,26 @@ def _join_blocked(q, kq, vq, kd, vd, *, cfg, scale, q_valid=None,
 
 @register("join_attention", "pallas")
 def _join_pallas(q, kq, vq, kd, vd, *, cfg, scale, q_valid=None,
-                 kq_valid=None, kd_valid=None):
+                 kq_valid=None, kd_valid=None, kd_scale=None, vd_scale=None,
+                 paged=None):
     del scale, q_valid                # kernel derives scale; rows w/o valid
     qt = q.transpose(0, 2, 1, 3)      # keys behave as in split_attention
+    kqt = kq.transpose(0, 2, 1, 3)
+    vqt = vq.transpose(0, 2, 1, 3)
+    if paged is not None:
+        # the kernel's doc-segment index maps walk the page table — the
+        # pools ([P, page, Hkv, D]) are already in kernel page layout and
+        # no dense per-batch KV copy is materialized
+        out = join_flash_attention_paged(
+            qt, kqt, vqt, paged.k, paged.v, paged.page_table, paged.valid,
+            kq_valid=kq_valid, kd_scale_pages=paged.k_scale,
+            vd_scale_pages=paged.v_scale)
+        return out.transpose(0, 2, 1, 3)
     out = join_flash_attention(
-        qt, kq.transpose(0, 2, 1, 3), vq.transpose(0, 2, 1, 3),
+        qt, kqt, vqt,
         kd.transpose(0, 2, 1, 3), vd.transpose(0, 2, 1, 3),
-        kq_valid=kq_valid, kd_valid=kd_valid)
+        kq_valid=kq_valid, kd_valid=kd_valid,
+        kd_scales=kd_scale, vd_scales=vd_scale)
     return out.transpose(0, 2, 1, 3)
 
 

@@ -103,9 +103,13 @@ class ServiceStats:
     n_pad_rows: int = 0                   # shape-padding rows
     n_redispatch: int = 0
     n_join_dispatch: int = 0              # scoring jit entries issued
-    n_decode_dispatch: int = 0            # on-device codec-decode dispatches
+    n_decode_dispatch: int = 0            # standalone codec-decode dispatches
     n_doc_cache_hit: int = 0              # candidate rows served from device
     n_doc_cache_miss: int = 0             # candidate rows staged from disk
+    h2d_bytes: int = 0                    # doc-side bytes shipped host->device
+    doc_hbm_bytes: int = 0                # doc-side bytes the join reads from
+                                          # device memory (analytic, per batch)
+    resident_docs: int = 0                # doc-cache residency gauge (last)
     query_encode_s: float = 0.0
     load_s: float = 0.0
     combine_s: float = 0.0
@@ -284,11 +288,20 @@ class RankingService:
     split-KV path; ``False`` = legacy concat).  ``use_layer_kv`` consumes
     the index's stored layer-``l`` doc K/V streams in the join (default:
     automatically on when the index has them and the fused path is
-    active).  ``doc_cache_mb`` > 0 enables the **device-resident hot-doc
-    LRU cache** (``repro.serving.doc_cache``): cache-hit candidates skip
-    index ``gather()``, H2D copy and codec decode entirely, and the
-    prefetcher stages only the misses — scores are bit-identical
-    hit-vs-miss because every row is assembled from the same device pool.
+    active); streams stored with ``kv_codec="int8"`` stay raw int8 all
+    the way into the join kernel, which dequantizes them in-register —
+    no standalone decode dispatch exists on any path
+    (``stats.n_decode_dispatch`` stays 0).  ``doc_cache_mb`` > 0 enables
+    the **paged device-resident hot-doc cache**
+    (``repro.serving.doc_cache``): the raw codec streams live in token-
+    page pools on device, cache-hit candidates skip index ``gather()``
+    and the H2D copy entirely, the prefetcher stages only misses, and
+    batch assembly is a page-table gather *inside* the scoring jit —
+    scores are bit-identical hit-vs-miss because every row is assembled
+    from the same stored bytes.  ``page_tokens`` sets the page size
+    (default: whole-doc slots); ``page_bucket=True`` additionally shrinks
+    each batch's page-table width to its longest doc (bucketed powers of
+    two — fewer gathered bytes, a few extra jit shapes).
     """
 
     def __init__(self, params, cfg: P.PreTTRConfig, index: TermRepIndex, *,
@@ -299,7 +312,9 @@ class RankingService:
                  join_fn: Callable | None = None,
                  validate_index: bool = True, fused: bool = True,
                  use_layer_kv: bool | None = None,
-                 doc_cache_mb: float = 0.0):
+                 doc_cache_mb: float = 0.0,
+                 page_tokens: int | None = None,
+                 page_bucket: bool = False):
         if backend is not None:
             from repro.models.backend import apply_backend
             cfg = apply_backend(cfg, backend)
@@ -335,23 +350,46 @@ class RankingService:
         self._join = join_fn or jax.jit(
             lambda p, qr, qv, st, dv: P.join_and_score(p, cfg, qr, qv, st,
                                                        dv, fused=fused))
-        self._join_kv = None
-        if self.use_layer_kv:
-            self._join_kv = jax.jit(
-                lambda p, qr, qv, st, dv, kl, vl: P.join_and_score(
-                    p, cfg, qr, qv, st, dv, doc_kv=(kl, vl), fused=True))
         # codec-aware staging: quantizing codecs (int8) ship their narrow
-        # raw streams over H2D and decode on device, just before the join;
-        # identity codecs (fp16/fp32) feed stored bytes straight through
+        # raw streams over H2D and decode *inside* the scoring jit (for
+        # int8 layer-K/V, in-register inside the join kernel) — the
+        # standalone decode dispatch only survives for injected join_fn
+        # test doubles; identity codecs (fp16/fp32) feed stored bytes
+        # straight through either way
         codec = getattr(index, "codec", None)
+        kv_codec = getattr(index, "kv_codec", None)
+        self._kv_quant = (self.use_layer_kv and kv_codec is not None
+                          and not kv_codec.decode_is_identity)
         self._decode = None
-        if codec is not None and not codec.decode_is_identity:
+        if (codec is not None and not codec.decode_is_identity
+                and join_fn is not None):
             self._decode = jax.jit(codec.decode)
+        self._join_raw = None
+        if (join_fn is None and codec is not None
+                and getattr(index, "gather_raw", None) is not None):
+            use_kv, kvq = self.use_layer_kv, self._kv_quant
+
+            def _raw_score(p, qr, qv, parts, dv):
+                x_d = (parts["reps"] if codec.decode_is_identity
+                       else codec.decode_group("reps", parts))
+                dkv = None
+                if use_kv:
+                    dkv = ((parts["layer_k"], parts["layer_v"],
+                            parts[kv_codec.scale_stream("layer_k")],
+                            parts[kv_codec.scale_stream("layer_v")])
+                           if kvq else
+                           (parts["layer_k"], parts["layer_v"]))
+                return P.join_and_score(p, cfg, qr, qv, x_d, dv,
+                                        doc_kv=dkv, fused=fused)
+
+            self._join_raw = jax.jit(_raw_score)
         # stream subset to stage: skip the (large) K/V streams of an index
         # that has them when this service doesn't consume them
         self._gather_streams = None
         if has_kv and not self.use_layer_kv and codec is not None:
             self._gather_streams = list(codec.streams(index.rep_dim))
+        lens = getattr(index, "doc_lengths", None)
+        self._doc_lens = np.asarray(lens) if lens is not None else None
 
         self._doc_cache = None
         if doc_cache_mb and doc_cache_mb > 0:
@@ -366,29 +404,100 @@ class RankingService:
                     "doc_cache_mb needs a codec-aware TermRepIndex "
                     "(gather_raw); this index stand-in has none")
             from repro.serving.doc_cache import DeviceDocCache
-            rep_dt, _ = codec.streams(index.rep_dim)["reps"]
-            if not codec.decode_is_identity:
-                rep_dt = np.dtype(np.float32)     # decoded on device
-            kv_dt = (np.dtype(index.layer_kv["dtype"])
-                     if self.use_layer_kv else None)
+            # the cache pools hold the index's *raw stored bytes* (int8
+            # payload + scales for quantizing codecs) — decode happens
+            # inside the pool-fused scoring jit, so an int8 index keeps
+            # ~4x more docs resident per MiB than decoded-float pools
+            spec = dict(codec.streams(index.rep_dim))
+            if self.use_layer_kv:
+                kvs = getattr(index, "kv_streams_spec", None)
+                spec.update(kvs() if kvs else {
+                    "layer_k": (np.dtype(index.layer_kv["dtype"]),
+                                (index.kv_dim,)),
+                    "layer_v": (np.dtype(index.layer_kv["dtype"]),
+                                (index.kv_dim,))})
+            self._cache_streams = list(spec)
             self._doc_cache = DeviceDocCache(
                 int(doc_cache_mb * 2**20), doc_len=cfg.max_doc_len,
-                rep_dim=index.rep_dim, rep_dtype=rep_dt,
-                kv_dim=index.kv_dim if self.use_layer_kv else 0,
-                kv_dtype=kv_dt, min_slots=2 * self.micro_batch)
-            # pool-fused scoring: the slot gather happens *inside* the jit,
-            # so batch assembly + join is one dispatch per micro-batch
-            if self.use_layer_kv:
-                self._join_pool = jax.jit(
-                    lambda p, qr, qv, reps, kp, vp, slots, dv:
-                    P.join_and_score(p, cfg, qr, qv, reps[slots], dv,
-                                     doc_kv=(kp[slots], vp[slots]),
-                                     fused=True))
+                streams=spec, page_tokens=page_tokens,
+                page_bucket=page_bucket, min_slots=2 * self.micro_batch)
+            # pool-fused scoring, one `_join_pool` call per micro-batch and
+            # zero per-document work.  On the pallas backend that call is a
+            # single jit: the layer-l K/V pools go in as a PagedDocKV and
+            # the kernel's index maps walk the page table, so no dense KV
+            # copy is ever materialized.  On the reference backends
+            # (plain/blocked) the call is two fused device dispatches —
+            # a page-table *assemble* jit (gather + reps decode) feeding a
+            # dense *score* jit.  Keeping them in one jit looks tidier but
+            # is ~2.3x slower: XLA refuses to materialize the page gathers
+            # and instead fuses a re-gather into every attention consumer.
+            # The raw int8 K/V bytes + scales pass through the seam
+            # undecoded, so dequantization still happens inside the scoring
+            # jit and `stats.n_decode_dispatch` stays 0.
+            page = self._doc_cache.page_tokens
+            use_kv, kvq = self.use_layer_kv, self._kv_quant
+            rep_streams = list(codec.streams(index.rep_dim))
+
+            def _dense(a, pt):
+                b, w = pt.shape
+                return a[pt].reshape((b, w * page) + a.shape[2:])
+
+            def _pool_assemble(pools, vpool, pt):
+                dval = _dense(vpool, pt).astype(bool)
+                if codec.decode_is_identity:
+                    x_d = _dense(pools["reps"], pt)
+                else:
+                    x_d = codec.decode_group(
+                        "reps",
+                        {s: _dense(pools[s], pt) for s in rep_streams})
+                dkv = None
+                if use_kv:
+                    dkv = ((_dense(pools["layer_k"], pt),
+                            _dense(pools["layer_v"], pt),
+                            _dense(pools[kv_codec.scale_stream("layer_k")],
+                                   pt),
+                            _dense(pools[kv_codec.scale_stream("layer_v")],
+                                   pt))
+                           if kvq else
+                           (_dense(pools["layer_k"], pt),
+                            _dense(pools["layer_v"], pt)))
+                return x_d, dval, dkv
+
+            def _dense_score(p, qr, qv, x_d, dval, dkv):
+                return P.join_and_score(p, cfg, qr, qv, x_d, dval,
+                                        doc_kv=dkv, fused=fused)
+
+            def _pool_score(p, qr, qv, pools, vpool, pt):
+                dval = _dense(vpool, pt).astype(bool)
+                if codec.decode_is_identity:
+                    x_d = _dense(pools["reps"], pt)
+                else:
+                    x_d = codec.decode_group(
+                        "reps",
+                        {s: _dense(pools[s], pt) for s in rep_streams})
+                dkv = P.PagedDocKV(
+                    k=pools["layer_k"], v=pools["layer_v"],
+                    valid=vpool, page_table=pt,
+                    k_scale=(pools[kv_codec.scale_stream("layer_k")]
+                             if kvq else None),
+                    v_scale=(pools[kv_codec.scale_stream("layer_v")]
+                             if kvq else None))
+                return P.join_and_score(p, cfg, qr, qv, x_d, dval,
+                                        doc_kv=dkv, fused=fused)
+
+            attn_impl = getattr(getattr(cfg, "backbone", cfg), "attn_impl",
+                                "plain")
+            if use_kv and attn_impl == "pallas":
+                self._join_pool = jax.jit(_pool_score)
             else:
-                self._join_pool = jax.jit(
-                    lambda p, qr, qv, reps, slots, dv:
-                    P.join_and_score(p, cfg, qr, qv, reps[slots], dv,
-                                     fused=fused))
+                assemble = jax.jit(_pool_assemble)
+                score = jax.jit(_dense_score)
+
+                def _pool_call(p, qr, qv, pools, vpool, pt):
+                    x_d, dval, dkv = assemble(pools, vpool, pt)
+                    return score(p, qr, qv, x_d, dval, dkv)
+
+                self._join_pool = _pool_call
 
         self._qcache: OrderedDict = OrderedDict()
         self._cache_size = cache_size
@@ -521,8 +630,10 @@ class RankingService:
                 reps, dvalid = self.index.gather(
                     [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
                 parts = {"reps": reps}
+            h2d = sum(np.asarray(a).nbytes for a in parts.values())
             payload = {"parts": jax.device_put(parts),
-                       "valid": jax.device_put(dvalid)}
+                       "valid": jax.device_put(dvalid),
+                       "h2d_bytes": h2d + np.asarray(dvalid).nbytes}
         last = next(s for s, _, _ in reversed(plan.rows) if s is not None)
         qr = jnp.concatenate(
             [(s or last).q_reps for s, _, _ in plan.rows], axis=0)
@@ -531,28 +642,37 @@ class RankingService:
         return qr, qv, payload, time.perf_counter() - t0
 
     def _stage_cached(self, plan: _Plan):
-        """Cache-aware staging: plan slots (LRU bump + miss admission) and
-        gather/ship only the miss rows."""
+        """Cache-aware staging: plan pages (LRU bump + miss admission) and
+        gather/ship only the miss rows, staged at the planned page-table
+        width so they scatter straight into the page pools."""
+        cache = self._doc_cache
         ids = [r[2] for r in plan.rows]
         # hit/miss accounting over *real* candidate rows only — the
         # micro-batch shape pads (state None, always trailing) would
         # otherwise skew the hit rates (pack_fill already excludes them)
         real_ids = [d for s, _, d in plan.rows if s is not None]
-        row_slots, miss_ids, miss_slots = self._doc_cache.plan(
-            ids, n_real=len(real_ids))
+        lens = self._doc_lens[ids] if self._doc_lens is not None else None
+        page_table, miss_ids, miss_pages = cache.plan(
+            ids, lengths=lens, n_real=len(real_ids))
         fresh = set(miss_ids)
         n_miss_rows = sum(1 for d in real_ids if d in fresh)
-        payload = {"row_slots": row_slots, "miss_slots": [],
-                   "miss_parts": None, "miss_valid": None,
+        payload = {"page_table": page_table, "miss_pages": None,
+                   "miss_parts": None, "miss_valid": None, "h2d_bytes": 0,
                    "n_miss_rows": n_miss_rows, "n_rows": len(real_ids)}
         if miss_ids:
-            bucket = self._doc_cache.bucket(len(miss_ids), self.micro_batch)
+            bucket = cache.bucket(len(miss_ids), self.micro_batch)
             pad = bucket - len(miss_ids)
             padded_ids = miss_ids + [miss_ids[-1]] * pad
-            payload["miss_slots"] = miss_slots + [miss_slots[-1]] * pad
+            pages = (np.concatenate([miss_pages,
+                                     np.repeat(miss_pages[-1:], pad, 0)])
+                     if pad else miss_pages)
             parts, valid = self.index.gather_raw(
-                padded_ids, pad_to=self.cfg.max_doc_len,
-                streams=self._gather_streams)
+                padded_ids, pad_to=pages.shape[1] * cache.page_tokens,
+                streams=self._cache_streams)
+            payload["miss_pages"] = pages
+            payload["h2d_bytes"] = (
+                sum(np.asarray(a).nbytes for a in parts.values())
+                + np.asarray(valid).nbytes)
             payload["miss_parts"] = jax.device_put(parts)
             payload["miss_valid"] = valid
         return payload
@@ -625,44 +745,44 @@ class RankingService:
 
     # -- device step ---------------------------------------------------------
     def _score_batch(self, qr, qv, payload):
-        """Assemble the doc-side operands and issue exactly one scoring jit
-        entry.  Cache mode: insert staged misses into the device pool, then
+        """Assemble the doc-side operands and issue exactly one pool-score
+        call (a fixed number of fused device dispatches, never per-doc).
+        Cache mode: insert staged misses into the device pool, then
         gather every row from it (hit and miss rows take the identical
         compute path, so scores are bit-equal either way)."""
+        self.stats.h2d_bytes += payload.get("h2d_bytes", 0)
         if self._doc_cache is not None:
+            cache = self._doc_cache
             mp = payload["miss_parts"]
             if mp is not None:
-                if self._decode:
-                    rows = self._decode(mp)
-                    self.stats.n_decode_dispatch += 1
-                else:
-                    rows = mp["reps"]
-                self._doc_cache.insert(
-                    payload["miss_slots"], rows, payload["miss_valid"],
-                    k=mp.get("layer_k"), v=mp.get("layer_v"))
+                cache.insert(payload["miss_pages"], mp,
+                             payload["miss_valid"])
             self.stats.n_doc_cache_miss += payload["n_miss_rows"]
             self.stats.n_doc_cache_hit += (payload["n_rows"]
                                            - payload["n_miss_rows"])
-            slots = jnp.asarray(np.asarray(payload["row_slots"], np.int32))
-            dval = self._doc_cache.valid_rows(payload["row_slots"])
-            reps, kp, vp = self._doc_cache.pools
+            self.stats.resident_docs = cache.resident_docs
+            pt = jnp.asarray(payload["page_table"])
+            # doc-side bytes the join pulls from device memory: one page
+            # gather per page-table entry (validity byte included)
+            self.stats.doc_hbm_bytes += (payload["page_table"].size
+                                         * cache.page_bytes)
             self.stats.n_join_dispatch += 1
-            if self.use_layer_kv:
-                return self._join_pool(self.params, qr, qv, reps, kp, vp,
-                                       slots, dval)
-            return self._join_pool(self.params, qr, qv, reps, slots, dval)
+            return self._join_pool(self.params, qr, qv, cache.pools,
+                                   cache.valid_pool, pt)
+        dparts, dval = payload["parts"], payload["valid"]
+        self.stats.doc_hbm_bytes += payload.get("h2d_bytes", 0)
+        if self._join_raw is not None:
+            # raw-stream scoring jit: codec decode (reps and, for an int8
+            # KV index, the in-kernel K/V dequant) happens inside the one
+            # dispatch — n_decode_dispatch stays 0 on this path
+            self.stats.n_join_dispatch += 1
+            return self._join_raw(self.params, qr, qv, dparts, dval)
+        if self._decode:                   # injected join_fn test doubles
+            st = self._decode(dparts)
+            self.stats.n_decode_dispatch += 1
         else:
-            dparts, dval = payload["parts"], payload["valid"]
-            if self._decode:
-                st = self._decode(dparts)
-                self.stats.n_decode_dispatch += 1
-            else:
-                st = dparts["reps"]
-            kl = dparts.get("layer_k") if self.use_layer_kv else None
-            vl = dparts.get("layer_v") if self.use_layer_kv else None
+            st = dparts["reps"]
         self.stats.n_join_dispatch += 1
-        if kl is not None:
-            return self._join_kv(self.params, qr, qv, st, dval, kl, vl)
         return self._join(self.params, qr, qv, st, dval)
 
     def _score_plan(self, plan: _Plan, qr, qv, payload, load_dt: float,

@@ -265,12 +265,14 @@ def test_served_scores_match_rank_forward(tmp_path, codec, tol):
 
 
 def test_int8_service_decodes_on_device(tmp_path):
-    """The prefetcher ships raw int8 streams and decodes after H2D: the
+    """The prefetcher ships raw int8 streams and decodes after H2D —
+    inside the scoring jit, with no standalone decode dispatch: the
     service path must agree with host-side gather()+join."""
     cfg, params, docs, _ = _build(tmp_path, codec="int8", n_shards=2)
     idx = TermRepIndex.open(str(tmp_path / "idx"))
     svc = RankingService(params, cfg, idx, micro_batch=len(docs))
-    assert svc._decode is not None              # on-device decode installed
+    assert svc._join_raw is not None            # in-jit decode installed
+    assert svc._decode is None                  # no separate decode dispatch
     q, qv = pack_query(np.asarray([3, 4]), cfg.max_query_len)
     resp = svc.rank(q, qv, list(range(len(docs))))
     order = np.argsort(resp.doc_ids)

@@ -88,6 +88,135 @@ def test_join_kernel_non_prefix_valid():
                                rtol=2e-5, atol=2e-5)
 
 
+def _quant_world(b, hq, hkv, sq, lq, ld, d, seed=11):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    q = jax.random.normal(ks[0], (b, hq, sq, d))
+    kq = jax.random.normal(ks[1], (b, hkv, lq, d))
+    vq = jax.random.normal(ks[2], (b, hkv, lq, d))
+    kd_q = jax.random.randint(ks[3], (b, hkv, ld, d), -127, 128,
+                              dtype=jnp.int8)
+    vd_q = jax.random.randint(ks[4], (b, hkv, ld, d), -127, 128,
+                              dtype=jnp.int8)
+    kd_s = jax.random.uniform(ks[5], (b, ld), minval=1e-3, maxval=0.05)
+    vd_s = jax.random.uniform(ks[6], (b, ld), minval=1e-3, maxval=0.05)
+    return q, kq, vq, kd_q, vd_q, kd_s, vd_s
+
+
+def test_join_kernel_int8_in_kernel_dequant_bit_exact():
+    """The tentpole equivalence: dequantizing int8 doc K/V *inside* the
+    KV-tile loop must be bit-exact vs the separate-dispatch reference
+    (decode the whole stream, then run the float kernel) — same f32
+    multiply on the same bytes, just moved into registers."""
+    from repro.kernels.join_attention import (dequantize_kv,
+                                              join_attention_ref_quant)
+    b, hq, hkv, sq, lq, ld, d = 2, 4, 2, 16, 8, 48, 32
+    q, kq, vq, kd_q, vd_q, kd_s, vd_s = _quant_world(b, hq, hkv, sq, lq,
+                                                     ld, d)
+    kqv = jnp.arange(lq)[None] < jnp.asarray([[6], [8]])
+    kdv = jnp.arange(ld)[None] < jnp.asarray([[48], [29]])
+    fused = join_flash_attention(q, kq, vq, kd_q, vd_q, kqv, kdv,
+                                 kd_scales=kd_s, vd_scales=vd_s,
+                                 block_q=16, block_k=16)
+    two_pass = join_flash_attention(q, kq, vq,
+                                    dequantize_kv(kd_q, kd_s),
+                                    dequantize_kv(vd_q, vd_s),
+                                    kqv, kdv, block_q=16, block_k=16)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(two_pass))
+    ref = join_attention_ref_quant(q, kq, vq, kd_q, vd_q, kd_s, vd_s,
+                                   kq_valid=kqv, kd_valid=kdv)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def _paginate(kd, vd, kdv, page, kd_s=None, vd_s=None):
+    """Pack dense [B, Hkv, Ld, D] doc K/V into cache-layout page pools
+    ([P, page, Hkv, D]) with page 0 reserved all-zero; rows keep all their
+    pages (dense table) so the paged kernel sees the same assembled
+    positions as the dense kernel."""
+    b, hkv, ld, d = kd.shape
+    n_p = ld // page
+    kd_r = np.moveaxis(np.asarray(kd), 1, 2).reshape(b * n_p, page, hkv, d)
+    vd_r = np.moveaxis(np.asarray(vd), 1, 2).reshape(b * n_p, page, hkv, d)
+    zeros = np.zeros_like(kd_r[:1])
+    kd_pages = jnp.asarray(np.concatenate([zeros, kd_r]))
+    vd_pages = jnp.asarray(np.concatenate([zeros, vd_r]))
+    pt = jnp.arange(1, 1 + b * n_p, dtype=jnp.int32).reshape(b, n_p)
+    dval = np.asarray(kdv, np.int32).reshape(b * n_p, page)
+    dval_pages = jnp.asarray(np.concatenate(
+        [np.zeros((1, page), np.int32), dval]))
+    out = [kd_pages, vd_pages, pt, dval_pages]
+    if kd_s is not None:
+        for s in (kd_s, vd_s):
+            s_r = np.asarray(s, np.float32).reshape(b * n_p, page, 1)
+            out.append(jnp.asarray(np.concatenate(
+                [np.zeros((1, page, 1), np.float32), s_r])))
+    return out
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_join_kernel_paged_vs_dense(quant):
+    """The paged kernel walking a page table over pool tiles computes the
+    same attention as the dense kernel on the assembled rows — bit-exact
+    when the dense doc tile equals the page size (same accumulation
+    order), quantized or not."""
+    from repro.kernels.join_attention import (join_attention_ref_paged,
+                                              join_flash_attention_paged)
+    b, hq, hkv, sq, lq, ld, d, page = 2, 4, 2, 16, 8, 48, 32, 16
+    q, kq, vq, kd_q, vd_q, kd_s, vd_s = _quant_world(b, hq, hkv, sq, lq,
+                                                     ld, d, seed=13)
+    kqv = jnp.arange(lq)[None] < jnp.asarray([[6], [8]])
+    # row 1's last page is entirely invalid — its table entry still points
+    # at a real (stale) page, which validity alone must mask
+    kdv = jnp.arange(ld)[None] < jnp.asarray([[41], [page * 2]])
+    if quant:
+        kd, vd = kd_q, vd_q
+        scales = dict(kd_scales=kd_s, vd_scales=vd_s)
+        kd_pg, vd_pg, pt, dval_pg, ks_pg, vs_pg = _paginate(
+            kd, vd, kdv, page, kd_s, vd_s)
+        spools = dict(kd_scale_pages=ks_pg, vd_scale_pages=vs_pg)
+    else:
+        kd = jax.random.normal(jax.random.PRNGKey(5), (b, hkv, ld, d))
+        vd = jax.random.normal(jax.random.PRNGKey(6), (b, hkv, ld, d))
+        scales, spools = {}, {}
+        kd_pg, vd_pg, pt, dval_pg = _paginate(kd, vd, kdv, page)
+    paged = join_flash_attention_paged(q, kq, vq, kd_pg, vd_pg, pt,
+                                       dval_pg, kqv, block_q=16, **spools)
+    dense = join_flash_attention(q, kq, vq, kd, vd, kqv, kdv,
+                                 block_q=16, block_k=page, **scales)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+    ref = join_attention_ref_paged(
+        q, kq, vq, kd_pg, vd_pg, pt, dval_pg, kq_valid=kqv, **spools)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_join_kernel_paged_zero_page_tail():
+    """Short docs point their page-table tail at the reserved zero page;
+    the assembled row must score identically to a dense row zero-padded
+    to the same length."""
+    from repro.kernels.join_attention import join_flash_attention_paged
+    b, hq, hkv, sq, lq, ld, d, page = 1, 2, 1, 8, 8, 32, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(21), 5)
+    q = jax.random.normal(ks[0], (b, hq, sq, d))
+    kq = jax.random.normal(ks[1], (b, hkv, lq, d))
+    vq = jax.random.normal(ks[2], (b, hkv, lq, d))
+    kd = jax.random.normal(ks[3], (b, hkv, ld, d))
+    vd = jax.random.normal(ks[4], (b, hkv, ld, d))
+    kqv = jnp.ones((b, lq), bool)
+    kdv = jnp.arange(ld)[None] < 13          # only the first page is real
+    kd_pg, vd_pg, pt, dval_pg = _paginate(kd, vd, kdv, page)
+    # drop the second page from the table: tail -> zero page 0
+    pt_short = pt.at[0, 1].set(0)
+    paged = join_flash_attention_paged(q, kq, vq, kd_pg, vd_pg, pt_short,
+                                       dval_pg, kqv, block_q=8)
+    dense = join_flash_attention(
+        q, kq, vq,
+        jnp.where(kdv[:, None, :, None], kd, 0),
+        jnp.where(kdv[:, None, :, None], vd, 0),
+        kqv, kdv, block_q=8, block_k=page)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_join_backend_impls_vs_oracle(backend):
     """Every registered join_attention impl computes the same attention
@@ -368,7 +497,10 @@ def test_doc_cache_eviction_under_tiny_budget(kv_index):
     from repro.serving import RankingService
     cfg, params, world, path, idx = kv_index
     probe = RankingService(params, cfg, idx, micro_batch=4, doc_cache_mb=64)
-    cap_bytes = probe.doc_cache.entry_bytes * (2 * 4 + 1)    # just over min
+    # just over the scheduler minimum: 2*micro_batch + 1 docs, plus the two
+    # reserved (zero/scratch) pages
+    cap_bytes = (probe.doc_cache.entry_bytes * (2 * 4 + 1)
+                 + 2 * probe.doc_cache.page_bytes)
     svc = RankingService(params, cfg, idx, micro_batch=4,
                          doc_cache_mb=cap_bytes / 2**20)
     rng = np.random.default_rng(1)
@@ -434,8 +566,8 @@ def test_one_join_dispatch_per_micro_batch(kv_index, doc_cache_mb):
             return fn(*a)
         return wrapped
 
-    # wrap every scoring entry point (direct, stored-KV, pool-fused)
-    for attr in ("_join", "_join_kv", "_join_pool"):
+    # wrap every scoring entry point (direct, raw-stream, pool-fused)
+    for attr in ("_join", "_join_raw", "_join_pool"):
         fn = getattr(svc, attr, None)
         if fn is not None:
             setattr(svc, attr, counting(fn))
