@@ -82,7 +82,8 @@ def main() -> None:
         from benchmarks.common import assert_bench_schema
         t0 = time.time()
         sizes = (dict(n_queries=8, candidates=8, concurrency=4,
-                      micro_batch=16, n_docs=64, max_d=64) if args.fast
+                      micro_batch=16, n_docs=64, max_d=64,
+                      shard_counts=(1, 2)) if args.fast
                  else {})
         rows = table5_latency.run_service(write_bench=not args.fast, **sizes)
         assert_bench_schema(rows)

@@ -182,6 +182,7 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
                 n_docs: int = 512, codec: str = "fp16", n_shards: int = 2,
                 zipf: float = 1.3, doc_cache_mb: float = 32.0,
                 store_layer_kv: bool = True, page_tokens: int = 32,
+                shard_counts: tuple = (1, 2, 4, 8),
                 write_bench: bool = True) -> list[dict]:
     """The serving perf trajectory: QPS / p50 / p99 / per-phase µs of the
     RankingService on a zipf candidate stream (``zipf`` > 0 skews candidate
@@ -200,6 +201,18 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
       ``page_tokens``-token pages with per-batch page-table bucketing, and
       the join kernel dequantizes in-register — no standalone decode
       dispatch anywhere (``decode_dispatch = 0``).
+
+    Then the **scale-out curve**: the *fused* configuration served through
+    the ``RankingRouter`` at each of ``shard_counts`` workers
+    (shard-affinity routing, per-worker doc caches; workers pin to
+    distinct jax devices when the host has enough, else share the default
+    device) -> ``serving/sharded/{n}/...`` rows plus the aggregate
+    ``serving/sharded/scaling_efficiency_qps`` ratio
+    ``qps[max_shards] / (max_shards * qps[1])``.  On the single-device CI
+    host the workers time-share one CPU, so the committed curve tracks
+    *overhead* (routing + merge cost vs the single-process fused row —
+    ``sharded/1`` must sit within the clock epsilon of ``fused``); on a
+    real multi-device mesh the same rows measure genuine scale-out.
 
     The default sizes sit at the paper's headline operating point — ``l =
     n-1`` (the query-time join is just the CLS-only final layer), long
@@ -298,6 +311,39 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
                   f"resident={r['resident_docs']:.0f})")
             rows += [{"name": f"serving/{name}/{k}", "value": float(v),
                       "unit": units[k]} for k, v in r.items()]
+
+        # scale-out curve: the fused configuration through the router at
+        # each shard count, same index + workload (per-worker cache budget
+        # so the fleet's aggregate cache grows with the shard count)
+        from repro.serving import RankingRouter
+        devs = jax.devices()
+        shard_qps = {}
+        for n_sh in shard_counts:
+            devices = devs[:n_sh] if len(devs) >= n_sh else None
+            router = RankingRouter(params, cfg, idx, n_shards=n_sh,
+                                   devices=devices, micro_batch=micro_batch,
+                                   fused=True, doc_cache_mb=doc_cache_mb)
+            r = _drive_service(router, queries, cand_lists, concurrency)
+            shard_qps[n_sh] = r["qps"]
+            print(f"[table5] service {backend} sharded n={n_sh} "
+                  f"({'pinned' if devices is not None else 'unpinned'}): "
+                  f"QPS={r['qps']:.2f} p50={r['p50_us']/1e3:.1f}ms "
+                  f"p99={r['p99_us']/1e3:.1f}ms "
+                  f"(batches={r['n_batches']:.0f} "
+                  f"pack_fill={r['pack_fill']:.2f} "
+                  f"cache_hit={r['doc_cache_hit_rate']:.2f} "
+                  f"h2d={r['h2d_mb']:.2f}MiB)")
+            rows += [{"name": f"serving/sharded/{n_sh}/{k}",
+                      "value": float(v), "unit": units[k]}
+                     for k, v in r.items()]
+    n_max = max(shard_counts)
+    efficiency = shard_qps[n_max] / max(1e-9, n_max * shard_qps[min(
+        shard_counts)] / min(shard_counts))
+    rows.append({"name": "serving/sharded/scaling_efficiency_qps",
+                 "value": efficiency, "unit": "frac"})
+    print(f"[table5] sharded scaling efficiency "
+          f"(QPS[{n_max}] / ({n_max} x QPS[{min(shard_counts)}]/"
+          f"{min(shard_counts)})): {efficiency:.2f}")
     speedup = results["fused"]["qps"] / max(1e-9, results["legacy"]["qps"])
     rows.append({"name": "serving/fused_over_legacy_qps", "value": speedup,
                  "unit": "x"})

@@ -1,8 +1,11 @@
 """Validate every committed ``BENCH_*.json`` trajectory file at the repo
 root against the shared row schema (``benchmarks.common.
-assert_bench_schema``).  CI runs this on every push so a malformed
-trajectory file — wrong keys, NaN values, duplicate row names, truncated
-JSON — fails fast instead of silently breaking the next PR's diff.
+assert_bench_schema``), plus file-specific structural checks — for
+``BENCH_serving.json``, the scale-out ``serving/sharded/*`` curve.  CI
+runs this on every push so a malformed trajectory file — wrong keys, NaN
+values, duplicate row names, truncated JSON, a sharded curve missing a
+shard count or its efficiency row — fails fast instead of silently
+breaking the next PR's diff.
 
 Usage: PYTHONPATH=src python -m benchmarks.validate_bench [files...]
 (default: glob BENCH_*.json at the repo root; exits non-zero on any
@@ -12,9 +15,67 @@ from __future__ import annotations
 
 import glob
 import os
+import re
 import sys
 
 from benchmarks.common import REPO_ROOT, load_bench
+
+_SHARDED_ROW = re.compile(r"^serving/sharded/(\d+)/(\w+)$")
+_SHARDED_EFFICIENCY = "serving/sharded/scaling_efficiency_qps"
+
+
+def validate_serving_rows(rows: list[dict]) -> list[str]:
+    """Structural checks specific to ``BENCH_serving.json`` -> list of
+    violation strings (empty = valid).
+
+    The scale-out curve must be *complete and consistent*, not merely
+    well-formed rows: every committed shard count carries the same metric
+    set (a count with, say, no ``qps`` row would silently drop out of the
+    regression gate's clock comparison), shard count 1 is present (the
+    single-process-comparable anchor — acceptance: within epsilon of the
+    ``fused`` rows), and the aggregate ``scaling_efficiency_qps`` ratio
+    row exists.  Row-*set* drift against the committed baseline is the
+    regression gate's job (``benchmarks.serving --check-baseline`` fails
+    on both added and removed names); this validates each file on its
+    own."""
+    problems: list[str] = []
+    names = [r["name"] for r in rows]
+    by_count: dict[int, set] = {}
+    for n in names:
+        m = _SHARDED_ROW.match(n)
+        if m:
+            by_count.setdefault(int(m.group(1)), set()).add(m.group(2))
+    if not by_count:
+        problems.append(
+            "no serving/sharded/{n}/* rows: the scale-out QPS curve is "
+            "missing (benchmarks.table5_latency.run_service writes it)")
+        return problems
+    if 1 not in by_count:
+        problems.append(
+            f"sharded curve has counts {sorted(by_count)} but no shard "
+            f"count 1 — the single-process-comparable anchor row")
+    for c in sorted(by_count):
+        if c < 1:
+            problems.append(f"sharded shard count {c} < 1")
+        if "qps" not in by_count[c]:
+            problems.append(f"serving/sharded/{c}/* has no qps row")
+    metric_sets = {frozenset(v) for v in by_count.values()}
+    if len(metric_sets) > 1:
+        ref = sorted(by_count)[0]
+        for c in sorted(by_count)[1:]:
+            if by_count[c] != by_count[ref]:
+                problems.append(
+                    f"sharded metric drift: count {c} has "
+                    f"{sorted(by_count[c] ^ by_count[ref])} differing "
+                    f"from count {ref}")
+    if _SHARDED_EFFICIENCY not in names:
+        problems.append(f"missing {_SHARDED_EFFICIENCY} row (the "
+                        f"aggregate scaling ratio the gate tracks)")
+    if "serving/fused/qps" not in names:
+        problems.append(
+            "missing serving/fused/qps: sharded/1 has no single-process "
+            "row to be compared against")
+    return problems
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -32,7 +93,14 @@ def main(argv: list[str] | None = None) -> int:
                   f"{type(e).__name__}: {e}")
             failed += 1
             continue
-        print(f"ok   {os.path.basename(path)}: {len(rows)} rows")
+        problems = []
+        if os.path.basename(path) == "BENCH_serving.json":
+            problems = validate_serving_rows(rows)
+        for p in problems:
+            print(f"FAIL {os.path.basename(path)}: {p}")
+            failed += 1
+        if not problems:
+            print(f"ok   {os.path.basename(path)}: {len(rows)} rows")
     return 1 if failed else 0
 
 

@@ -7,10 +7,13 @@ Importing this package never touches jax device state.
 """
 from repro.dist.context import current_rules, install_rules, maybe_shard
 from repro.dist.sharding import (ShardingRules, default_rules,
-                                 divisible_spec, replicated_serving_rules)
+                                 divisible_spec, replicated_serving_rules,
+                                 serving_shard_devices,
+                                 sharded_serving_rules)
 
 __all__ = [
     "ShardingRules", "default_rules", "divisible_spec",
-    "replicated_serving_rules", "current_rules", "install_rules",
+    "replicated_serving_rules", "sharded_serving_rules",
+    "serving_shard_devices", "current_rules", "install_rules",
     "maybe_shard",
 ]

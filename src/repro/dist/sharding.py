@@ -89,6 +89,48 @@ def replicated_serving_rules(mesh: Mesh) -> ShardingRules:
     return ShardingRules(mesh, {"batch": every})
 
 
+def sharded_serving_rules(mesh: Mesh) -> ShardingRules:
+    """Scale-out serving cells: a mesh with a ``"shard"`` axis, one index
+    shard (and one ``ShardWorker``) per position along it.
+
+    The *query path* rules: ``batch`` (packed micro-batch rows) shards over
+    the non-``shard`` axes; **nothing** maps onto ``"shard"`` — that axis
+    is not a tensor-parallel dimension but a *data-ownership* one.  Each
+    worker holds a full replica of the (small) model parameters and the
+    exclusive slice of the (huge) document-side state, so doc bytes never
+    cross the shard axis; only candidate ids travel to a shard and only
+    ``[rows]`` float32 scores travel back (the router's all-gather)."""
+    if "shard" not in mesh.axis_names:
+        raise ValueError(
+            f"sharded serving needs a mesh with a 'shard' axis; got axes "
+            f"{tuple(mesh.axis_names)}")
+    rest = tuple(a for a in mesh.axis_names if a != "shard")
+    return ShardingRules(mesh, {"batch": rest})
+
+
+def serving_shard_devices(mesh: Mesh) -> list:
+    """One representative device per serving shard -> list of length
+    ``mesh.shape["shard"]``, in shard order.
+
+    :class:`~repro.serving.sharded.ShardWorker` ``i`` pins its params,
+    doc-cache pools, and staged batches to ``devices[i]`` via explicit
+    ``jax.device_put`` (thread-safe, unlike the thread-local
+    ``jax.default_device``), so N workers score concurrently with zero
+    cross-device traffic on the doc side.  Axes other than ``"shard"``
+    are replica dimensions for the query path; the worker uses each
+    shard's first replica device."""
+    if "shard" not in mesh.axis_names:
+        raise ValueError(
+            f"sharded serving needs a mesh with a 'shard' axis; got axes "
+            f"{tuple(mesh.axis_names)}")
+    ax = mesh.axis_names.index("shard")
+    devs = mesh.devices
+    # index every non-shard axis at 0, keep the shard axis whole
+    sel = tuple(slice(None) if i == ax else 0
+                for i in range(devs.ndim))
+    return list(devs[sel].reshape(-1))
+
+
 def divisible_spec(rules: ShardingRules, axes, shape) -> PartitionSpec:
     """Annotation tuple + concrete shape -> PartitionSpec.
 

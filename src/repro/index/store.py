@@ -401,6 +401,59 @@ class TermRepIndex:
         original per-doc API)."""
         return self.gather(doc_ids, pad_to=pad_to)
 
+    # -- scale-out serving (doc -> serving-shard assignment) -------------------
+    def serving_assignment(self, n_serving: int) -> np.ndarray:
+        """Partition every doc id across ``n_serving`` serving shards,
+        **aligned with the physical shard files** -> ``[N]`` int64 of
+        serving-shard ids.
+
+        The shard-affinity invariant of scale-out serving is that a doc's
+        bytes never leave the worker that stores them, so the assignment
+        is derived from the doc table's physical-shard column rather than
+        hashing ids:
+
+        * ``n_serving <= n_shards``: physical shard ``s`` maps whole to
+          serving shard ``s % n_serving`` — each worker memmaps a disjoint
+          subset of the shard directories.
+        * ``n_serving > n_shards`` (including every v1 single-file index):
+          each physical shard's docs are split *contiguously* among the
+          serving shards ``s, s + n_shards, s + 2*n_shards, ...`` — every
+          worker still reads exactly one physical shard's files, over a
+          contiguous (cache- and readahead-friendly) byte range.
+
+        Deterministic for a given index + ``n_serving``, so the router and
+        its workers can compute it independently."""
+        if self._doc_table is None:
+            raise RuntimeError(
+                "index is not open for reading: finalize() and open() it")
+        if n_serving < 1:
+            raise ValueError(f"n_serving must be >= 1, got {n_serving}")
+        phys = self._doc_table[:, 0]
+        n_phys = max(1, self.n_shards)
+        out = np.empty(len(phys), np.int64)
+        if n_serving <= n_phys:
+            out[:] = phys % n_serving
+            return out
+        for si in range(n_phys):
+            sel = np.flatnonzero(phys == si)
+            if sel.size == 0:
+                continue
+            targets = np.arange(si, n_serving, n_phys, dtype=np.int64)
+            out[sel] = targets[(np.arange(sel.size) * targets.size)
+                               // sel.size]
+        return out
+
+    def shard_view(self, assignment: np.ndarray,
+                   shard_id: int) -> "ShardIndexView":
+        """An ownership-checking view of this index restricted to the docs
+        ``assignment`` routes to ``shard_id`` (see
+        :meth:`serving_assignment`).  The view keeps the *global* id space
+        (``len(view) == len(index)``) so routed candidate lists need no id
+        translation, but every gather verifies residency and raises a
+        clear shard-affinity error instead of silently reading another
+        shard's bytes."""
+        return ShardIndexView(self, assignment, shard_id)
+
     # -- accounting (paper §6.2) -----------------------------------------------
     def storage_bytes(self) -> int:
         return self._n_tokens * self.bytes_per_token()
@@ -410,3 +463,103 @@ class TermRepIndex:
                                 bytes_per_val: int) -> int:
         """Paper's ClueWeb09-B projection: 112TB raw -> 2.8TB at e=128 fp16."""
         return int(n_docs * avg_tokens * rep_dim * bytes_per_val)
+
+
+class ShardIndexView:
+    """One serving shard's ownership-checked window onto a
+    :class:`TermRepIndex` (built by :meth:`TermRepIndex.shard_view`).
+
+    The view keeps the **global doc-id space** — ``len(view)`` is the full
+    corpus and gathers take the same ids the router routes — but it *owns*
+    only the docs its ``assignment`` maps to ``shard_id``.  Gathering a
+    doc the view does not own raises :class:`IndexError` naming both the
+    shard it was routed to and the shard that actually stores it, instead
+    of the raw fancy-index fault (or, worse, a silent cross-shard read)
+    the underlying memmaps would produce.  ``RankingService.submit``
+    surfaces the same check at admission time via ``describe_misroute``.
+
+    Everything that is not id-dependent (codec, streams_spec, rep_dim,
+    ``l``, layer-K/V metadata, ...) delegates to the base index, so a view
+    drops into every ``TermRepIndex`` consumer — ``BatchEngine``,
+    ``DeviceDocCache`` stream specs, ``validate_index_compat`` — without
+    special-casing."""
+
+    def __init__(self, base: TermRepIndex, assignment: np.ndarray,
+                 shard_id: int):
+        assignment = np.asarray(assignment, np.int64).reshape(-1)
+        if len(assignment) != len(base):
+            raise ValueError(
+                f"assignment maps {len(assignment)} docs but the index "
+                f"has {len(base)}")
+        if not (0 <= shard_id < max(1, assignment.max(initial=0) + 1)):
+            raise ValueError(
+                f"shard_id {shard_id} outside the assignment's range "
+                f"[0, {assignment.max(initial=0) + 1})")
+        self.base = base
+        self.assignment = assignment
+        self.shard_id = int(shard_id)
+        self._owned_mask = assignment == self.shard_id
+
+    def __getattr__(self, name):
+        # non-id-dependent surface (codec, rep_dim, streams_spec, ...)
+        if name == "base":                # guard __init__/unpickle recursion
+            raise AttributeError(name)
+        return getattr(self.base, name)
+
+    def __len__(self):
+        return len(self.base)
+
+    @property
+    def n_owned(self) -> int:
+        return int(self._owned_mask.sum())
+
+    @property
+    def owned_ids(self) -> np.ndarray:
+        """Global doc ids resident in this serving shard ([n_owned])."""
+        return np.flatnonzero(self._owned_mask)
+
+    def owns(self, doc_ids) -> np.ndarray:
+        """Per-id residency mask ([n] bool); out-of-range ids are False."""
+        ids = np.asarray(list(doc_ids), np.int64).reshape(-1)
+        ok = (ids >= 0) & (ids < len(self.base))
+        out = np.zeros(ids.size, bool)
+        out[ok] = self._owned_mask[ids[ok]]
+        return out
+
+    def describe_misroute(self, doc_ids) -> str | None:
+        """Human-readable description of the first few misrouted ids in
+        ``doc_ids`` (None when every in-range id is owned).  Hook consumed
+        by ``repro.serving.service.validate_doc_routing``."""
+        ids = np.asarray(list(doc_ids), np.int64).reshape(-1)
+        in_range = ids[(ids >= 0) & (ids < len(self.base))]
+        bad = in_range[~self._owned_mask[in_range]]
+        if bad.size == 0:
+            return None
+        shown = bad[:4]
+        homes = self.assignment[shown]
+        pairs = ", ".join(f"{d}->shard {h}" for d, h in zip(shown, homes))
+        more = f" (+{bad.size - shown.size} more)" if bad.size > 4 else ""
+        return (f"doc id(s) routed to serving shard {self.shard_id} but "
+                f"resident elsewhere: {pairs}{more} — shard-affinity "
+                f"routing must send each candidate to the shard that "
+                f"stores its bytes (TermRepIndex.serving_assignment)")
+
+    def _check(self, doc_ids):
+        ids = np.asarray(list(doc_ids), np.int64).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= len(self.base)):
+            raise IndexError(
+                f"doc id out of range [0, {len(self.base)}) in gather()")
+        msg = self.describe_misroute(ids)
+        if msg:
+            raise IndexError(msg)
+        return ids
+
+    def gather_raw(self, doc_ids, pad_to=None, streams=None):
+        return self.base.gather_raw(self._check(doc_ids), pad_to=pad_to,
+                                    streams=streams)
+
+    def gather(self, doc_ids, pad_to=None):
+        return self.base.gather(self._check(doc_ids), pad_to=pad_to)
+
+    def load_docs(self, doc_ids, pad_to=None):
+        return self.gather(doc_ids, pad_to=pad_to)

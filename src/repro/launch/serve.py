@@ -64,6 +64,13 @@ def main() -> None:
                          "sequential Reranker loop")
     ap.add_argument("--concurrency", type=int, default=4,
                     help="--service: queries admitted per scheduling wave")
+    ap.add_argument("--serving-shards", type=int, default=0,
+                    help="--service: serve through the scale-out "
+                         "RankingRouter with N ShardWorkers (shard-affinity "
+                         "candidate routing over the doc table; each worker "
+                         "pinned to its own jax device when enough exist, "
+                         "with its own --doc-cache-mb budget); 0 = "
+                         "single-process RankingService")
     ap.add_argument("--store-layer-kv", action="store_true",
                     help="store the join layer's doc-side K/V streams in "
                          "the built index (fused join skips the layer-l "
@@ -125,11 +132,34 @@ def main() -> None:
 
     # ---- phase 2: serve -----------------------------------------------------
     if args.service:
-        svc = RankingService(params, cfg, idx, micro_batch=args.micro_batch,
-                             fused=not args.legacy_join,
-                             doc_cache_mb=args.doc_cache_mb,
-                             page_tokens=args.doc_cache_page,
-                             page_bucket=args.doc_cache_bucket)
+        if args.serving_shards > 0:
+            from repro.serving import RankingRouter
+            # pin one worker per device when the host has enough (forced
+            # host devices count); otherwise share the default device —
+            # same scores either way
+            devs = jax.devices()
+            devices = (devs[:args.serving_shards]
+                       if len(devs) >= args.serving_shards else None)
+            svc = RankingRouter(params, cfg, idx,
+                                n_shards=args.serving_shards,
+                                devices=devices,
+                                micro_batch=args.micro_batch,
+                                fused=not args.legacy_join,
+                                doc_cache_mb=args.doc_cache_mb,
+                                page_tokens=args.doc_cache_page,
+                                page_bucket=args.doc_cache_bucket)
+            pinned = "pinned" if devices is not None else "unpinned"
+            print(f"[serve] scale-out: {args.serving_shards} shard workers "
+                  f"({pinned}; "
+                  + ", ".join(f"s{w.shard_id}={w.n_owned} docs"
+                              for w in svc.workers) + ")")
+        else:
+            svc = RankingService(params, cfg, idx,
+                                 micro_batch=args.micro_batch,
+                                 fused=not args.legacy_join,
+                                 doc_cache_mb=args.doc_cache_mb,
+                                 page_tokens=args.doc_cache_page,
+                                 page_bucket=args.doc_cache_bucket)
         # warm the jit caches (encode + the packed join shape) off the clock
         q0, qv0 = pack_query(world.queries[0], cfg.max_query_len)
         svc.rank(q0, qv0, list(world.candidates(0, k=args.candidates)),

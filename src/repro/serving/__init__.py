@@ -1,11 +1,17 @@
-"""Query-time serving: the RankingService API and the legacy Reranker."""
+"""Query-time serving: the RankingService API, the scale-out
+router/shard-worker subsystem (``repro.serving.sharded``), and the legacy
+Reranker."""
 from repro.serving.doc_cache import DeviceDocCache
 from repro.serving.reranker import Reranker
-from repro.serving.service import (DeadlinePriorityPolicy, RankingService,
-                                   RankRequest, RankResponse, RerankStats,
-                                   SchedulerPolicy, ServiceStats,
+from repro.serving.service import (BatchEngine, DeadlinePriorityPolicy,
+                                   RankingService, RankRequest, RankResponse,
+                                   RerankStats, SchedulerPolicy, ServiceStats,
+                                   validate_doc_routing,
                                    validate_index_compat)
+from repro.serving.sharded import RankingRouter, ShardWorker
 
 __all__ = ["RankingService", "RankRequest", "RankResponse", "RerankStats",
            "SchedulerPolicy", "DeadlinePriorityPolicy", "ServiceStats",
-           "Reranker", "DeviceDocCache", "validate_index_compat"]
+           "BatchEngine", "RankingRouter", "ShardWorker",
+           "Reranker", "DeviceDocCache", "validate_doc_routing",
+           "validate_index_compat"]

@@ -85,7 +85,8 @@ class DeviceDocCache:
 
     def __init__(self, capacity_bytes: int, *, doc_len: int,
                  streams: dict, page_tokens: int | None = None,
-                 page_bucket: bool = False, min_slots: int = 2):
+                 page_bucket: bool = False, min_slots: int = 2,
+                 device=None):
         if page_tokens is None:
             page_tokens = doc_len
         page_tokens = -(-int(page_tokens) // 8) * 8   # sublane multiple
@@ -116,11 +117,19 @@ class DeviceDocCache:
                 f"micro_batch")
         self.capacity_pages = n_pages
         self.capacity = (n_pages - 2) // self.pages_per_doc  # docs, worst case
+        # pools are *committed* to ``device`` when one is given (scale-out
+        # serving pins each shard worker's cache to its own device; the
+        # scatter/gather jits then follow the pool's placement) — None
+        # keeps jax's default placement
+        def _alloc(shape, dt):
+            z = jnp.zeros(shape, dt)
+            return jax.device_put(z, device) if device is not None else z
+
         self._pools = {
-            name: jnp.zeros((n_pages, page_tokens) + shape, dt)
+            name: _alloc((n_pages, page_tokens) + shape, dt)
             for name, (dt, shape) in self._streams.items()}
         #: device per-page validity (int8 — the paged kernel's dval pool)
-        self.valid_pool = jnp.zeros((n_pages, page_tokens), jnp.int8)
+        self.valid_pool = _alloc((n_pages, page_tokens), jnp.int8)
         self._valid_np = np.zeros((n_pages, page_tokens), bool)
         self._pages_of: OrderedDict[int, list[int]] = OrderedDict()  # LRU
         self._free = list(range(2, n_pages))

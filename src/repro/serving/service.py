@@ -23,6 +23,13 @@ concurrent queries.  This module turns the one-query-at-a-time
   behaviour that used to live inline in ``Reranker`` is a pluggable
   :class:`SchedulerPolicy` (ordering, batch deadline, split).
 
+The scheduler/packer/scorer core lives in :class:`BatchEngine` so it can
+be composed twice: ``RankingService`` pairs one engine with the admission
+/ query-encode side for the classic single-process service, and
+``repro.serving.sharded.ShardWorker`` pairs one engine *per index shard*
+(pinned to its own device, with its own doc cache and prefetch thread)
+behind a :class:`~repro.serving.sharded.RankingRouter`.
+
 Per-request phase timings (:class:`RerankStats`) keep the Table-5 split:
 ``query_encode_s`` (Query), ``load_s`` (index gather + H2D + packed q-rep
 assembly — overlapped with device compute, so phase sums can exceed wall
@@ -94,9 +101,30 @@ class RankResponse:
     latency_s: float = 0.0                # submit -> completion wall time
 
 
+#: ServiceStats fields that are per-engine *gauges* (a snapshot of one
+#: worker's state, e.g. its doc-cache residency) — a router aggregating
+#: workers takes their max, never their sum; the per-worker values stay
+#: readable on ``RankingRouter.worker_stats``.
+_STATS_GAUGE_FIELDS = frozenset({"resident_docs"})
+
+#: ServiceStats fields that are *overlapped clocks*: shard workers drain
+#: concurrently, so the aggregate wall is the slowest worker's, not the
+#: sum of all of them.
+_STATS_CONCURRENT_FIELDS = frozenset({"wall_s"})
+
+
 @dataclasses.dataclass
 class ServiceStats:
-    """Aggregate scheduler counters across all drained batches."""
+    """Aggregate scheduler counters across all drained batches.
+
+    Instances are **mergeable** (:meth:`merge` / ``+``) so a router can
+    aggregate its shard workers' counters without dropping any field:
+    merge iterates ``dataclasses.fields``, so a counter added later (the
+    way ``h2d_bytes``/``doc_hbm_bytes`` arrived) is summed automatically
+    instead of silently vanishing from the aggregate.  Two exceptions are
+    declared by name: gauges (``resident_docs``) merge as ``max`` and
+    overlapped clocks (``wall_s``) merge as ``max`` because concurrent
+    workers' walls overlap."""
     n_requests: int = 0
     n_batches: int = 0                    # accepted (non-redispatched) batches
     n_rows: int = 0                       # real candidate rows scored
@@ -125,6 +153,29 @@ class ServiceStats:
     def doc_cache_hit_rate(self) -> float:
         seen = self.n_doc_cache_hit + self.n_doc_cache_miss
         return self.n_doc_cache_hit / max(1, seen)
+
+    def merge(self, other: "ServiceStats") -> "ServiceStats":
+        """Field-complete aggregate of two stat blocks (e.g. two shard
+        workers'): counters and phase clocks sum; gauges and overlapped
+        walls take the max (see the class docstring)."""
+        out = ServiceStats()
+        for f in dataclasses.fields(ServiceStats):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if f.name in _STATS_GAUGE_FIELDS | _STATS_CONCURRENT_FIELDS:
+                setattr(out, f.name, max(a, b))
+            else:
+                setattr(out, f.name, a + b)
+        return out
+
+    def __add__(self, other):
+        if not isinstance(other, ServiceStats):
+            return NotImplemented
+        return self.merge(other)
+
+    def __radd__(self, other):
+        if other == 0:                    # sum([...]) support
+            return self.merge(ServiceStats())
+        return NotImplemented
 
 
 # ---------------------------------------------------------------------------
@@ -216,13 +267,38 @@ _STOP = object()
 # ---------------------------------------------------------------------------
 
 
-def validate_index_compat(cfg: P.PreTTRConfig, index: TermRepIndex) -> None:
+def validate_doc_routing(index, doc_ids) -> None:
+    """Raise ValueError when any of ``doc_ids`` cannot be gathered from
+    ``index``: out of the global id range, or — when ``index`` is a
+    :class:`~repro.index.store.ShardIndexView` — routed to a serving shard
+    that does not store the document.  Catching a misroute *here*, at
+    admission, gives a clear shard-affinity message instead of the raw
+    gather fault it would otherwise surface as deep in the prefetcher."""
+    ids = np.asarray(list(doc_ids), np.int64).reshape(-1)
+    if ids.size == 0:
+        return
+    if ids.min() < 0 or ids.max() >= len(index):
+        raise ValueError(f"doc id out of range [0, {len(index)})")
+    describe = getattr(index, "describe_misroute", None)
+    if describe is not None:
+        msg = describe(ids)
+        if msg:
+            raise ValueError(msg)
+
+
+def validate_index_compat(cfg: P.PreTTRConfig, index: TermRepIndex,
+                          doc_ids=None) -> None:
     """Raise ValueError when an opened index cannot be served under ``cfg``.
 
     ``load_docs(pad_to=cfg.max_doc_len)`` would otherwise silently truncate
     documents indexed under a larger ``max_doc_len``, and mismatched
     ``rep_dim`` / ``l`` / compression would produce garbage scores instead
-    of an error."""
+    of an error.
+
+    With ``doc_ids``, additionally validates that every id can actually be
+    gathered from ``index`` — in range, and (for a serving-shard view)
+    resident in that shard's slice of the doc table — via
+    :func:`validate_doc_routing`."""
     if bool(index.compressed) != bool(cfg.compress_dim):
         raise ValueError(
             f"index compressed={bool(index.compressed)} but config "
@@ -253,80 +329,62 @@ def validate_index_compat(cfg: P.PreTTRConfig, index: TermRepIndex) -> None:
             f"index max_doc_len={idx_max} exceeds config "
             f"max_doc_len={cfg.max_doc_len}: serving would silently "
             f"truncate stored documents")
+    if doc_ids is not None:
+        validate_doc_routing(index, doc_ids)
 
 
 # ---------------------------------------------------------------------------
-# The service
+# The scheduler/packer/scorer core
 # ---------------------------------------------------------------------------
 
 
-class RankingService:
-    """Request/response re-ranking service over a :class:`TermRepIndex`.
+class BatchEngine:
+    """The reusable micro-batch scheduler/packer/scorer.
 
-    Usage::
+    One engine owns: the packing queue and straggler re-dispatch, the
+    prefetch pipeline (index ``gather_raw`` + H2D overlap), the doc-side
+    scoring jits (raw-stream / pool-fused), the optional paged device doc
+    cache, and one :class:`ServiceStats` block.  It knows nothing about
+    requests or query encoding — callers enqueue *states* and drain
+    completed ones back:
 
-        svc = RankingService(params, cfg, index, micro_batch=32)
-        rid = svc.submit(RankRequest(q_tokens, q_valid, doc_ids))
-        for resp in svc.drain():          # processes everything queued
-            ...
-        # or, single query: svc.rank(q_tokens, q_valid, doc_ids)
+    * :class:`RankingService` composes one engine with its admission /
+      query-rep-LRU side (the classic single-process service);
+    * :class:`repro.serving.sharded.ShardWorker` composes one engine per
+      index-shard view, pinned to its own device, with the query reps
+      handed over (already device-resident) by the router.
 
-    ``drain`` runs the scheduler: candidate rows from every queued request
-    are packed into fixed ``micro_batch``-row batches (cross-query), the
-    prefetch thread stages each planned batch's index blocks + H2D copy
-    while the device scores the previous one, and the ``policy`` handles
-    ordering and deadline-triggered re-dispatch.
+    A *state* is any object with the ``_ReqState`` row contract:
+    ``q_reps`` ([1, Lq, d] on this engine's device), ``q_valid_j``
+    ([Lq]), ``priority`` / ``seq`` / ``deadline_s`` (scheduling),
+    ``scores`` (np [n] float32), ``n`` / ``n_done`` (completion), and
+    ``stats`` (:class:`RerankStats`).
 
-    ``prefetch_depth`` bounds the staged-batch pipeline (``0`` disables the
-    prefetch thread entirely: synchronous inline staging, for debugging).
-    ``backend`` routes all compute through ``repro.models.backend`` (e.g.
-    ``"pallas"`` for the flash/fused kernels) exactly as on ``Reranker``.
-    ``encode_fn`` / ``join_fn`` override the jitted model entry points
-    (used by the ``Reranker`` shim so patched-in test doubles stay live).
-
-    ``fused`` selects the join execution path (default: the fused
-    split-KV path; ``False`` = legacy concat).  ``use_layer_kv`` consumes
-    the index's stored layer-``l`` doc K/V streams in the join (default:
-    automatically on when the index has them and the fused path is
-    active); streams stored with ``kv_codec="int8"`` stay raw int8 all
-    the way into the join kernel, which dequantizes them in-register —
-    no standalone decode dispatch exists on any path
-    (``stats.n_decode_dispatch`` stays 0).  ``doc_cache_mb`` > 0 enables
-    the **paged device-resident hot-doc cache**
-    (``repro.serving.doc_cache``): the raw codec streams live in token-
-    page pools on device, cache-hit candidates skip index ``gather()``
-    and the H2D copy entirely, the prefetcher stages only misses, and
-    batch assembly is a page-table gather *inside* the scoring jit —
-    scores are bit-identical hit-vs-miss because every row is assembled
-    from the same stored bytes.  ``page_tokens`` sets the page size
-    (default: whole-doc slots); ``page_bucket=True`` additionally shrinks
-    each batch's page-table width to its longest doc (bucketed powers of
-    two — fewer gathered bytes, a few extra jit shapes).
+    ``device`` pins the engine to one device of the serving mesh: params
+    are copied there once, every staged array is ``device_put`` there, and
+    the jits follow their (committed) inputs — so N engines on N devices
+    score concurrently without any cross-device traffic.  ``None`` keeps
+    jax's default placement (single-process behaviour, bit-identical to
+    the pre-engine ``RankingService``).
     """
 
-    def __init__(self, params, cfg: P.PreTTRConfig, index: TermRepIndex, *,
+    def __init__(self, params, cfg: P.PreTTRConfig, index, *,
                  micro_batch: int = 32, policy: SchedulerPolicy | None = None,
-                 cache_size: int = 64, backend: str | None = None,
-                 prefetch_depth: int = 2, deadline_s: float | None = None,
-                 encode_fn: Callable | None = None,
-                 join_fn: Callable | None = None,
-                 validate_index: bool = True, fused: bool = True,
+                 prefetch_depth: int = 2, fused: bool = True,
                  use_layer_kv: bool | None = None,
+                 join_fn: Callable | None = None,
                  doc_cache_mb: float = 0.0,
                  page_tokens: int | None = None,
-                 page_bucket: bool = False):
-        if backend is not None:
-            from repro.models.backend import apply_backend
-            cfg = apply_backend(cfg, backend)
-        if validate_index:
-            validate_index_compat(cfg, index)
-        self.params = params
+                 page_bucket: bool = False,
+                 device=None):
         self.cfg = cfg
         self.index = index
         self.micro_batch = micro_batch
         self.policy = policy or SchedulerPolicy()
         self.prefetch_depth = max(0, prefetch_depth)
-        self.default_deadline_s = deadline_s
+        self.device = device
+        self.params = (jax.device_put(params, device)
+                       if device is not None else params)
         self.stats = ServiceStats()
 
         self.fused = bool(fused)
@@ -345,8 +403,6 @@ class RankingService:
                 "(fused=True)")
         self.use_layer_kv = bool(use_layer_kv)
 
-        self._encode = encode_fn or jax.jit(
-            lambda p, t, v: P.encode_query(p, cfg, t, v))
         self._join = join_fn or jax.jit(
             lambda p, qr, qv, st, dv: P.join_and_score(p, cfg, qr, qv, st,
                                                        dv, fused=fused))
@@ -420,7 +476,8 @@ class RankingService:
             self._doc_cache = DeviceDocCache(
                 int(doc_cache_mb * 2**20), doc_len=cfg.max_doc_len,
                 streams=spec, page_tokens=page_tokens,
-                page_bucket=page_bucket, min_slots=2 * self.micro_batch)
+                page_bucket=page_bucket, min_slots=2 * self.micro_batch,
+                device=device)
             # pool-fused scoring, one `_join_pool` call per micro-batch and
             # zero per-document work.  On the pallas backend that call is a
             # single jit: the layer-l K/V pools go in as a PagedDocKV and
@@ -499,90 +556,23 @@ class RankingService:
 
                 self._join_pool = _pool_call
 
-        self._qcache: OrderedDict = OrderedDict()
-        self._cache_size = cache_size
-        self._seq = 0
-        self._waiting: list[_ReqState] = []     # admitted, not yet planned
+        self._waiting: list[_ReqState] = []     # enqueued, not yet planned
         self._rows: deque = deque()             # planned row pool
         self._replans: deque = deque()          # straggler re-dispatch plans
-        self._done_early: list[RankResponse] = []   # empty-candidate requests
-
-    def reset_stats(self) -> None:
-        """Zero the aggregate counters (e.g. after a jit-warmup request)."""
-        self.stats = ServiceStats()
 
     @property
     def doc_cache(self):
         """The device-resident hot-doc cache (None when disabled)."""
         return self._doc_cache
 
-    # -- admission -----------------------------------------------------------
-    def submit(self, req: RankRequest) -> str:
-        """Queue a request; returns its request id.  The query is encoded
-        (or fetched from the query-rep LRU cache) at admission time."""
-        rid = req.request_id or f"req-{self._seq}"
-        if len(req.doc_ids):
-            ids = np.asarray(req.doc_ids, np.int64)
-            if ids.min() < 0 or ids.max() >= len(self.index):
-                # reject at admission: a bad id surfacing later, inside the
-                # prefetcher, would abort drain() and lose every co-packed
-                # request's response
-                raise ValueError(
-                    f"request {rid}: doc id out of range "
-                    f"[0, {len(self.index)})")
-        state = _ReqState(req, rid, self._seq,
-                          req.deadline_s if req.deadline_s is not None
-                          else self.default_deadline_s)
-        self._seq += 1
-        self.stats.n_requests += 1
-        if state.n == 0:                   # nothing to rank; respond now
-            self._done_early.append(RankResponse(
-                request_id=rid, doc_ids=[],
-                scores=np.zeros((0,), np.float32), stats=state.stats,
-                latency_s=0.0))
-            return rid
-        t0 = time.perf_counter()
-        state.q_reps = self._query_reps(np.asarray(req.q_tokens),
-                                        np.asarray(req.q_valid))
-        dt = time.perf_counter() - t0
-        state.stats.query_encode_s = dt
-        self.stats.query_encode_s += dt
-        state.q_valid_j = jnp.asarray(req.q_valid)
+    @property
+    def pending(self) -> bool:
+        return bool(self._waiting or self._rows or self._replans)
+
+    def enqueue(self, state) -> None:
+        """Admit a state's candidate rows into the next drain's packing
+        pool (ordering applied at drain time via the policy)."""
         self._waiting.append(state)
-        return rid
-
-    def rank(self, q_tokens, q_valid, doc_ids, *, priority: int = 0,
-             deadline_s: float | None = None,
-             request_id: str | None = None) -> RankResponse:
-        """Synchronous single-query convenience: submit + drain.  Note this
-        drains *every* queued request (other requests' responses are
-        buffered and returned by the next ``drain()``); concurrent traffic
-        should use ``submit``/``drain`` directly."""
-        rid = self.submit(RankRequest(q_tokens, q_valid, list(doc_ids),
-                                      request_id=request_id,
-                                      priority=priority,
-                                      deadline_s=deadline_s))
-        out = None
-        for resp in self.drain():
-            if resp.request_id == rid:
-                out = resp
-            else:                 # other callers' responses stay claimable
-                self._done_early.append(resp)
-        assert out is not None
-        return out
-
-    # -- query side ----------------------------------------------------------
-    def _query_reps(self, q_tokens: np.ndarray, q_valid: np.ndarray):
-        key = (q_tokens.tobytes(), q_valid.tobytes())
-        if key in self._qcache:
-            self._qcache.move_to_end(key)
-            return self._qcache[key]
-        reps = self._encode(self.params, q_tokens[None], q_valid[None])
-        reps.block_until_ready()
-        self._qcache[key] = reps
-        if len(self._qcache) > self._cache_size:
-            self._qcache.popitem(last=False)
-        return reps
 
     # -- scheduling ----------------------------------------------------------
     def _admit_waiting(self):
@@ -631,8 +621,8 @@ class RankingService:
                     [r[2] for r in plan.rows], pad_to=self.cfg.max_doc_len)
                 parts = {"reps": reps}
             h2d = sum(np.asarray(a).nbytes for a in parts.values())
-            payload = {"parts": jax.device_put(parts),
-                       "valid": jax.device_put(dvalid),
+            payload = {"parts": jax.device_put(parts, self.device),
+                       "valid": jax.device_put(dvalid, self.device),
                        "h2d_bytes": h2d + np.asarray(dvalid).nbytes}
         last = next(s for s, _, _ in reversed(plan.rows) if s is not None)
         qr = jnp.concatenate(
@@ -673,7 +663,7 @@ class RankingService:
             payload["h2d_bytes"] = (
                 sum(np.asarray(a).nbytes for a in parts.values())
                 + np.asarray(valid).nbytes)
-            payload["miss_parts"] = jax.device_put(parts)
+            payload["miss_parts"] = jax.device_put(parts, self.device)
             payload["miss_valid"] = valid
         return payload
 
@@ -689,12 +679,12 @@ class RankingService:
             except Exception as e:                    # noqa: BLE001
                 out_q.put((plan, None, None, None, 0.0, e))
 
-    def drain(self) -> list[RankResponse]:
-        """Run the scheduler until every queued request has a response.
-        Returns responses in completion order."""
+    def drain(self) -> list:
+        """Run the scheduler until every enqueued state is fully scored.
+        Returns the *completed states* in completion order (the composer
+        turns them into responses)."""
         t_wall = time.perf_counter()
-        done: list[RankResponse] = list(self._done_early)
-        self._done_early.clear()
+        done: list = []
         self._admit_waiting()
         if not self._rows and not self._replans:
             self.stats.wall_s += time.perf_counter() - t_wall
@@ -786,7 +776,7 @@ class RankingService:
         return self._join(self.params, qr, qv, st, dval)
 
     def _score_plan(self, plan: _Plan, qr, qv, payload, load_dt: float,
-                    done: list[RankResponse]):
+                    done: list):
         rows = plan.rows
         t0 = time.perf_counter()
         scores = np.asarray(jax.device_get(
@@ -829,7 +819,249 @@ class RankingService:
             s.scores[ci] = scores[i]
             s.n_done += 1
             if s.n_done == s.n:
-                done.append(self._finalize(s))
+                done.append(s)
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+
+class RankingService:
+    """Request/response re-ranking service over a :class:`TermRepIndex`.
+
+    Usage::
+
+        svc = RankingService(params, cfg, index, micro_batch=32)
+        rid = svc.submit(RankRequest(q_tokens, q_valid, doc_ids))
+        for resp in svc.drain():          # processes everything queued
+            ...
+        # or, single query: svc.rank(q_tokens, q_valid, doc_ids)
+
+    ``drain`` runs the scheduler: candidate rows from every queued request
+    are packed into fixed ``micro_batch``-row batches (cross-query), the
+    prefetch thread stages each planned batch's index blocks + H2D copy
+    while the device scores the previous one, and the ``policy`` handles
+    ordering and deadline-triggered re-dispatch.  The packing / staging /
+    scoring core is a :class:`BatchEngine`; this class adds admission, the
+    query-rep LRU, and response assembly.
+
+    ``prefetch_depth`` bounds the staged-batch pipeline (``0`` disables the
+    prefetch thread entirely: synchronous inline staging, for debugging).
+    ``backend`` routes all compute through ``repro.models.backend`` (e.g.
+    ``"pallas"`` for the flash/fused kernels) exactly as on ``Reranker``.
+    ``encode_fn`` / ``join_fn`` override the jitted model entry points
+    (used by the ``Reranker`` shim so patched-in test doubles stay live).
+
+    ``fused`` selects the join execution path (default: the fused
+    split-KV path; ``False`` = legacy concat).  ``use_layer_kv`` consumes
+    the index's stored layer-``l`` doc K/V streams in the join (default:
+    automatically on when the index has them and the fused path is
+    active); streams stored with ``kv_codec="int8"`` stay raw int8 all
+    the way into the join kernel, which dequantizes them in-register —
+    no standalone decode dispatch exists on any path
+    (``stats.n_decode_dispatch`` stays 0).  ``doc_cache_mb`` > 0 enables
+    the **paged device-resident hot-doc cache**
+    (``repro.serving.doc_cache``): the raw codec streams live in token-
+    page pools on device, cache-hit candidates skip index ``gather()``
+    and the H2D copy entirely, the prefetcher stages only misses, and
+    batch assembly is a page-table gather *inside* the scoring jit —
+    scores are bit-identical hit-vs-miss because every row is assembled
+    from the same stored bytes.  ``page_tokens`` sets the page size
+    (default: whole-doc slots); ``page_bucket=True`` additionally shrinks
+    each batch's page-table width to its longest doc (bucketed powers of
+    two — fewer gathered bytes, a few extra jit shapes).
+    """
+
+    def __init__(self, params, cfg: P.PreTTRConfig, index: TermRepIndex, *,
+                 micro_batch: int = 32, policy: SchedulerPolicy | None = None,
+                 cache_size: int = 64, backend: str | None = None,
+                 prefetch_depth: int = 2, deadline_s: float | None = None,
+                 encode_fn: Callable | None = None,
+                 join_fn: Callable | None = None,
+                 validate_index: bool = True, fused: bool = True,
+                 use_layer_kv: bool | None = None,
+                 doc_cache_mb: float = 0.0,
+                 page_tokens: int | None = None,
+                 page_bucket: bool = False,
+                 device=None):
+        if backend is not None:
+            from repro.models.backend import apply_backend
+            cfg = apply_backend(cfg, backend)
+        if validate_index:
+            validate_index_compat(cfg, index)
+        self.cfg = cfg
+        self.index = index
+        self.default_deadline_s = deadline_s
+        self.engine = BatchEngine(
+            params, cfg, index, micro_batch=micro_batch, policy=policy,
+            prefetch_depth=prefetch_depth, fused=fused,
+            use_layer_kv=use_layer_kv, join_fn=join_fn,
+            doc_cache_mb=doc_cache_mb, page_tokens=page_tokens,
+            page_bucket=page_bucket, device=device)
+        self._encode = encode_fn or jax.jit(
+            lambda p, t, v: P.encode_query(p, cfg, t, v))
+        self._qcache: OrderedDict = OrderedDict()
+        self._cache_size = cache_size
+        self._seq = 0
+        self._done_early: list[RankResponse] = []   # empty-candidate requests
+
+    # -- engine proxies (back-compat attribute surface) -----------------------
+    @property
+    def params(self):
+        return self.engine.params
+
+    @params.setter
+    def params(self, value):
+        self.engine.params = value
+
+    @property
+    def micro_batch(self):
+        return self.engine.micro_batch
+
+    @micro_batch.setter
+    def micro_batch(self, value):
+        self.engine.micro_batch = value
+
+    @property
+    def policy(self):
+        return self.engine.policy
+
+    @policy.setter
+    def policy(self, value):
+        self.engine.policy = value
+
+    @property
+    def prefetch_depth(self):
+        return self.engine.prefetch_depth
+
+    @property
+    def fused(self):
+        return self.engine.fused
+
+    @property
+    def use_layer_kv(self):
+        return self.engine.use_layer_kv
+
+    @property
+    def stats(self) -> ServiceStats:
+        return self.engine.stats
+
+    def reset_stats(self) -> None:
+        """Zero the aggregate counters (e.g. after a jit-warmup request)."""
+        self.engine.stats = ServiceStats()
+
+    @property
+    def doc_cache(self):
+        """The device-resident hot-doc cache (None when disabled)."""
+        return self.engine.doc_cache
+
+    @property
+    def _join(self):
+        return self.engine._join
+
+    @_join.setter
+    def _join(self, fn):
+        self.engine._join = fn
+
+    @property
+    def _join_raw(self):
+        return self.engine._join_raw
+
+    @_join_raw.setter
+    def _join_raw(self, fn):
+        self.engine._join_raw = fn
+
+    @property
+    def _join_pool(self):
+        return self.engine._join_pool
+
+    @_join_pool.setter
+    def _join_pool(self, fn):
+        self.engine._join_pool = fn
+
+    @property
+    def _decode(self):
+        return self.engine._decode
+
+    @_decode.setter
+    def _decode(self, fn):
+        self.engine._decode = fn
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: RankRequest) -> str:
+        """Queue a request; returns its request id.  The query is encoded
+        (or fetched from the query-rep LRU cache) at admission time."""
+        rid = req.request_id or f"req-{self._seq}"
+        if len(req.doc_ids):
+            try:
+                # reject at admission: a bad id surfacing later, inside the
+                # prefetcher, would abort drain() and lose every co-packed
+                # request's response
+                validate_doc_routing(self.index, req.doc_ids)
+            except ValueError as e:
+                raise ValueError(f"request {rid}: {e}") from None
+        state = _ReqState(req, rid, self._seq,
+                          req.deadline_s if req.deadline_s is not None
+                          else self.default_deadline_s)
+        self._seq += 1
+        self.stats.n_requests += 1
+        if state.n == 0:                   # nothing to rank; respond now
+            self._done_early.append(RankResponse(
+                request_id=rid, doc_ids=[],
+                scores=np.zeros((0,), np.float32), stats=state.stats,
+                latency_s=0.0))
+            return rid
+        t0 = time.perf_counter()
+        state.q_reps = self._query_reps(np.asarray(req.q_tokens),
+                                        np.asarray(req.q_valid))
+        dt = time.perf_counter() - t0
+        state.stats.query_encode_s = dt
+        self.stats.query_encode_s += dt
+        state.q_valid_j = jnp.asarray(req.q_valid)
+        self.engine.enqueue(state)
+        return rid
+
+    def rank(self, q_tokens, q_valid, doc_ids, *, priority: int = 0,
+             deadline_s: float | None = None,
+             request_id: str | None = None) -> RankResponse:
+        """Synchronous single-query convenience: submit + drain.  Note this
+        drains *every* queued request (other requests' responses are
+        buffered and returned by the next ``drain()``); concurrent traffic
+        should use ``submit``/``drain`` directly."""
+        rid = self.submit(RankRequest(q_tokens, q_valid, list(doc_ids),
+                                      request_id=request_id,
+                                      priority=priority,
+                                      deadline_s=deadline_s))
+        out = None
+        for resp in self.drain():
+            if resp.request_id == rid:
+                out = resp
+            else:                 # other callers' responses stay claimable
+                self._done_early.append(resp)
+        assert out is not None
+        return out
+
+    # -- query side ----------------------------------------------------------
+    def _query_reps(self, q_tokens: np.ndarray, q_valid: np.ndarray):
+        key = (q_tokens.tobytes(), q_valid.tobytes())
+        if key in self._qcache:
+            self._qcache.move_to_end(key)
+            return self._qcache[key]
+        reps = self._encode(self.params, q_tokens[None], q_valid[None])
+        reps.block_until_ready()
+        self._qcache[key] = reps
+        if len(self._qcache) > self._cache_size:
+            self._qcache.popitem(last=False)
+        return reps
+
+    def drain(self) -> list[RankResponse]:
+        """Run the scheduler until every queued request has a response.
+        Returns responses in completion order."""
+        done: list[RankResponse] = list(self._done_early)
+        self._done_early.clear()
+        done += [self._finalize(s) for s in self.engine.drain()]
+        return done
 
     def _finalize(self, state: _ReqState) -> RankResponse:
         order = np.argsort(-state.scores)

@@ -1,0 +1,314 @@
+"""RankingRouter: the query-side front of scale-out serving.
+
+The router owns everything a single-process ``RankingService`` owns
+*except* the document side: admission (typed ``RankRequest``s, bad-id /
+misroute rejection with the full corpus view), the shared query-rep LRU
+(each distinct query is encoded through layers ``0..l`` exactly once, no
+matter how many shards its candidates fan out to), shard-affinity
+candidate routing, the scatter of per-shard candidate slices, the score
+all-gather + per-query merge, and aggregate accounting across workers.
+
+Shard-affinity routing is the core invariant: a candidate's stored bytes
+**never leave the shard that stores them**.  The router routes ids by the
+deterministic :meth:`TermRepIndex.serving_assignment` map (derived from
+the format-v2 doc table's physical-shard column), each
+:class:`~repro.serving.sharded.worker.ShardWorker` gathers only from its
+own :class:`~repro.index.store.ShardIndexView` (which *raises* on a
+misrouted id rather than reading across), and only two things ever cross
+shards: query reps going out (``[1, Lq, d]`` per query per shard) and
+float32 scores coming back (the all-gather).  There is no cross-shard
+re-gather of document state.
+
+Bit-exactness: the merged response for any request equals what a single-
+process ``RankingService`` over the whole index returns for the same
+candidates — each score row is computed by the same jitted
+``join_and_score`` from the same stored bytes, and rows are batch-
+independent, so neither packing differences nor shard fan-out can change
+a score (tests/test_sharded_serving.py asserts bitwise equality across
+backends, codecs, cache states, and shard counts).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prettr as P
+from repro.serving.service import (RankRequest, RankResponse, RerankStats,
+                                   SchedulerPolicy, ServiceStats,
+                                   validate_doc_routing,
+                                   validate_index_compat)
+from repro.serving.sharded.worker import ShardTask, ShardWorker
+
+
+class _RouterReq:
+    """Router-side record of one in-flight request: the full candidate
+    list, the score buffer the shard tasks scatter back into, and the
+    count of shards still owing scores."""
+
+    __slots__ = ("rid", "doc_ids", "scores", "stats", "t_submit",
+                 "pending_shards")
+
+    def __init__(self, rid: str, doc_ids):
+        self.rid = rid
+        self.doc_ids = list(doc_ids)
+        self.scores = np.zeros(len(self.doc_ids), np.float32)
+        self.stats = RerankStats(n_docs=len(self.doc_ids))
+        self.t_submit = time.perf_counter()
+        self.pending_shards = 0
+
+
+class RankingRouter:
+    """Scale-out re-ranking service: one router, ``n_shards`` workers.
+
+    Drop-in for ``RankingService`` on the request path — ``submit`` /
+    ``drain`` / ``rank`` / ``stats`` / ``reset_stats`` have the same
+    shapes — so benchmarks and the serve CLI drive either through one
+    code path.
+
+    Placement: pass ``mesh`` (a mesh with a ``"shard"`` axis — see
+    :func:`repro.dist.sharded_serving_rules`) or an explicit ``devices``
+    list to pin worker ``i`` to device ``i``; with neither, workers share
+    jax's default device (functionally identical, no scale-out — the
+    single-device test configuration).  ``doc_cache_mb`` is **per
+    worker**: each shard caches its own hot docs on its own device, so
+    the fleet's aggregate cache grows with the shard count exactly like
+    the index slices do.
+
+    ``drain`` scatter-gathers: every worker with queued tasks drains
+    concurrently on its own thread (each runs its own prefetch pipeline
+    and scoring jits on its own device), completed per-shard score slices
+    scatter back into each request's buffer by original candidate
+    position, and a request's response is emitted once its last shard
+    reports.  Aggregate :attr:`stats` merge the workers' counters through
+    ``ServiceStats.merge`` (gauges max, overlapped walls max, everything
+    else summed); :attr:`worker_stats` keeps the per-shard view.
+    """
+
+    def __init__(self, params, cfg, index, *, n_shards: int | None = None,
+                 mesh=None, devices=None, backend: str | None = None,
+                 micro_batch: int = 32,
+                 policy: SchedulerPolicy | None = None,
+                 cache_size: int = 64, prefetch_depth: int = 2,
+                 deadline_s: float | None = None,
+                 encode_fn=None, validate_index: bool = True,
+                 fused: bool = True, use_layer_kv: bool | None = None,
+                 doc_cache_mb: float = 0.0,
+                 page_tokens: int | None = None,
+                 page_bucket: bool = False):
+        if backend is not None:
+            from repro.models.backend import apply_backend
+            cfg = apply_backend(cfg, backend)
+        if mesh is not None:
+            from repro.dist import serving_shard_devices
+            mesh_devs = serving_shard_devices(mesh)
+            if devices is None:
+                devices = mesh_devs
+            if n_shards is None:
+                n_shards = len(devices)
+            if n_shards != len(devices):
+                raise ValueError(
+                    f"n_shards={n_shards} but the mesh's shard axis has "
+                    f"{len(mesh_devs)} positions")
+        if n_shards is None:
+            n_shards = len(devices) if devices else 1
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if devices is not None and len(devices) != n_shards:
+            raise ValueError(
+                f"{len(devices)} devices for {n_shards} shards")
+        if validate_index:
+            validate_index_compat(cfg, index)
+        self.cfg = cfg
+        self.index = index
+        self.n_shards = int(n_shards)
+        self.default_deadline_s = deadline_s
+        self.assignment = index.serving_assignment(self.n_shards)
+        devs = list(devices) if devices is not None else [None] * n_shards
+        self.workers = [
+            ShardWorker(params, cfg, index.shard_view(self.assignment, s),
+                        shard_id=s, device=devs[s], micro_batch=micro_batch,
+                        policy=policy, prefetch_depth=prefetch_depth,
+                        fused=fused, use_layer_kv=use_layer_kv,
+                        doc_cache_mb=doc_cache_mb, page_tokens=page_tokens,
+                        page_bucket=page_bucket)
+            for s in range(self.n_shards)]
+        self.params = params
+        self._encode = encode_fn or jax.jit(
+            lambda p, t, v: P.encode_query(p, cfg, t, v))
+        self._qcache: OrderedDict = OrderedDict()
+        self._cache_size = cache_size
+        self._seq = 0
+        self._inflight: dict[str, _RouterReq] = {}
+        self._done_early: list[RankResponse] = []
+        #: admission-side counters (n_requests, query_encode_s, router
+        #: drain wall); worker counters merge in via :attr:`stats`
+        self._admission_stats = ServiceStats()
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def stats(self) -> ServiceStats:
+        """Aggregate across the router and every worker (see
+        ``ServiceStats.merge`` for per-field semantics).  ``wall_s`` is
+        the router's own drain wall — it brackets the concurrent worker
+        drains, so merging by max keeps it the fleet's true elapsed
+        time."""
+        out = self._admission_stats
+        for w in self.workers:
+            out = out.merge(w.stats)
+        return out
+
+    @property
+    def doc_cache(self):
+        """Worker 0's device doc cache (None when caching is disabled) —
+        the presence probe CLIs use; each worker's own cache is at
+        ``router.workers[i].doc_cache``."""
+        return self.workers[0].doc_cache
+
+    @property
+    def worker_stats(self) -> list[ServiceStats]:
+        """Per-shard counters, shard order (the issue's 'aggregate as a
+        list' view for gauges like ``resident_docs``)."""
+        return [w.stats for w in self.workers]
+
+    def reset_stats(self) -> None:
+        self._admission_stats = ServiceStats()
+        for w in self.workers:
+            w.reset_stats()
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: RankRequest) -> str:
+        """Queue a request: validate ids against the *full* corpus view,
+        encode the query once (shared LRU), split the candidate list by
+        shard assignment, and enqueue one :class:`ShardTask` per shard
+        that owns any of its candidates."""
+        rid = req.request_id or f"req-{self._seq}"
+        if len(req.doc_ids):
+            try:
+                validate_doc_routing(self.index, req.doc_ids)
+            except ValueError as e:
+                raise ValueError(f"request {rid}: {e}") from None
+        rec = _RouterReq(rid, req.doc_ids)
+        seq = self._seq
+        self._seq += 1
+        self._admission_stats.n_requests += 1
+        if not rec.doc_ids:                # nothing to rank; respond now
+            self._done_early.append(RankResponse(
+                request_id=rid, doc_ids=[],
+                scores=np.zeros((0,), np.float32), stats=rec.stats,
+                latency_s=0.0))
+            return rid
+        t0 = time.perf_counter()
+        q_reps = self._query_reps(np.asarray(req.q_tokens),
+                                  np.asarray(req.q_valid))
+        dt = time.perf_counter() - t0
+        rec.stats.query_encode_s = dt
+        self._admission_stats.query_encode_s += dt
+        q_valid = jnp.asarray(req.q_valid)
+        deadline = (req.deadline_s if req.deadline_s is not None
+                    else self.default_deadline_s)
+
+        ids = np.asarray(rec.doc_ids, np.int64)
+        homes = self.assignment[ids]
+        for s in np.unique(homes):
+            sel = np.flatnonzero(homes == s)
+            w = self.workers[int(s)]
+            task = ShardTask(
+                rid, seq, ids[sel].tolist(), sel,
+                priority=req.priority, deadline_s=deadline,
+                # query reps cross the shard boundary here — the only
+                # doc-ward traffic; each worker gets its own committed copy
+                q_reps=w.put(q_reps), q_valid_j=w.put(q_valid),
+                shard_id=int(s))
+            w.enqueue(task)
+            rec.pending_shards += 1
+        self._inflight[rid] = rec
+        return rid
+
+    def rank(self, q_tokens, q_valid, doc_ids, *, priority: int = 0,
+             deadline_s: float | None = None,
+             request_id: str | None = None) -> RankResponse:
+        """Synchronous single-query convenience: submit + drain (drains
+        everything queued; other requests' responses are buffered for the
+        next ``drain()``)."""
+        rid = self.submit(RankRequest(q_tokens, q_valid, list(doc_ids),
+                                      request_id=request_id,
+                                      priority=priority,
+                                      deadline_s=deadline_s))
+        out = None
+        for resp in self.drain():
+            if resp.request_id == rid:
+                out = resp
+            else:
+                self._done_early.append(resp)
+        assert out is not None
+        return out
+
+    def _query_reps(self, q_tokens: np.ndarray, q_valid: np.ndarray):
+        key = (q_tokens.tobytes(), q_valid.tobytes())
+        if key in self._qcache:
+            self._qcache.move_to_end(key)
+            return self._qcache[key]
+        reps = self._encode(self.params, q_tokens[None], q_valid[None])
+        reps.block_until_ready()
+        self._qcache[key] = reps
+        if len(self._qcache) > self._cache_size:
+            self._qcache.popitem(last=False)
+        return reps
+
+    # -- scatter / gather ----------------------------------------------------
+    def drain(self) -> list[RankResponse]:
+        """Drain every worker concurrently, merge per-shard score slices,
+        and return completed responses in completion order."""
+        t_wall = time.perf_counter()
+        done: list[RankResponse] = list(self._done_early)
+        self._done_early.clear()
+        busy = [w for w in self.workers if w.pending]
+        if busy:
+            results: list[list[ShardTask] | None] = [None] * len(busy)
+            errors: list[BaseException | None] = [None] * len(busy)
+
+            def _run(i, w):
+                try:
+                    results[i] = w.drain()
+                except BaseException as e:        # noqa: BLE001
+                    errors[i] = e
+
+            threads = [threading.Thread(target=_run, args=(i, w),
+                                        daemon=True)
+                       for i, w in enumerate(busy)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            for e in errors:
+                if e is not None:
+                    raise e
+            # all-gather: scatter each completed task's scores back into
+            # its request's buffer by original candidate position
+            for tasks in results:
+                for task in tasks:
+                    rec = self._inflight[task.rid]
+                    rec.scores[task.cand_idx] = task.scores
+                    rec.stats.load_s += task.stats.load_s
+                    rec.stats.combine_s += task.stats.combine_s
+                    rec.stats.n_redispatch += task.stats.n_redispatch
+                    rec.pending_shards -= 1
+                    if rec.pending_shards == 0:
+                        del self._inflight[task.rid]
+                        done.append(self._finalize(rec))
+        self._admission_stats.wall_s += time.perf_counter() - t_wall
+        return done
+
+    def _finalize(self, rec: _RouterReq) -> RankResponse:
+        order = np.argsort(-rec.scores)
+        return RankResponse(
+            request_id=rec.rid,
+            doc_ids=[rec.doc_ids[i] for i in order],
+            scores=rec.scores[order],
+            stats=rec.stats,
+            latency_s=time.perf_counter() - rec.t_submit)
