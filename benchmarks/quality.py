@@ -3,8 +3,14 @@
 Sweeps the retrieval cascade (``repro.eval.cascade``) over storage codec
 {fp32, fp16, int8} x join layer ``l`` on the seeded synthetic world — one
 trained ranker per ``l``, shared across codecs (codecs change stored
-bytes, never training) — and writes per-stage IR metrics through the same
-schema-asserting writer as ``BENCH_serving.json``.  This is the file every
+bytes, never training) — plus the *serving operating points* the index
+actually ships: product-quantized reps (``pq``), int8 reps with int8 K/V
+streams (``int8_kv``), and the ``keep_frac=0.5`` token-pruned int8 build
+served at its pruned ``max_doc_len`` (``int8_pruned``).  Every cell is an
+independent seeded ``run_cascade``, so appending cells never perturbs the
+committed codec rows (the fp32 exact gate stays green across such
+appends).  Rows are written through the same schema-asserting writer as
+``BENCH_serving.json``.  This is the file every
 future codec / pruning / kernel PR diffs against for quality, the way
 ``BENCH_serving.json`` is diffed for speed (PreTTR §6: the whole game is
 compression "without a substantial degradation in ranking performance").
@@ -31,6 +37,14 @@ from benchmarks.common import (BENCH_QUALITY_PATH, assert_bench_schema,
 
 QUALITY_LS = (1, 3)                      # >= 2 join depths (paper Table 3)
 QUALITY_CODECS = ("fp32", "fp16", "int8")
+#: serving operating points beyond the plain codec sweep: extra kwargs
+#: into run_cascade per cell (the bytes-vs-quality trade the tentpole
+#: PRs are judged by — PQ codes, codec-encoded K/V, token pruning)
+QUALITY_EXTRA_CELLS = (
+    ("pq", dict(codec="pq")),
+    ("int8_kv", dict(codec="int8", store_layer_kv=True, kv_codec="int8")),
+    ("int8_pruned", dict(codec="int8", keep_frac=0.5)),
+)
 QUALITY_K = 32                           # first-stage pool depth
 QUALITY_K_METRIC = 10
 QUALITY_SEED = 7                         # train seed (world seed: make_world)
@@ -54,11 +68,13 @@ def _rows_for(res, prefix: str) -> list[dict]:
 
 
 def run_quality(steps: int = 40, ls=QUALITY_LS, codecs=QUALITY_CODECS,
+                extra_cells=QUALITY_EXTRA_CELLS,
                 k: int = QUALITY_K, k_metric: int = QUALITY_K_METRIC,
                 write_bench_file: bool = True, fast: bool = False,
                 out_path: str | None = None) -> list[dict]:
-    """Train one ranker per ``l``, evaluate the cascade per codec, and
-    return (+ optionally write) the ``{name, value, unit}`` rows.
+    """Train one ranker per ``l``, evaluate the cascade per codec cell
+    (plus the ``extra_cells`` serving operating points), and return
+    (+ optionally write) the ``{name, value, unit}`` rows.
 
     ``fast`` shrinks the world and training for CI smokes of the *writer
     path* — those numbers must never overwrite the committed trajectory,
@@ -70,9 +86,23 @@ def run_quality(steps: int = 40, ls=QUALITY_LS, codecs=QUALITY_CODECS,
         world = type(world)(n_docs=96, n_queries=8,
                             vocab_size=world.vocab_size,
                             doc_len=world.doc_len, seed=3)
+        # one codec cell + one extra cell: enough to smoke the writer and
+        # the pruned/pq cascade plumbing without the full sweep's clock
         ls, codecs, steps = ls[:1], codecs[:2], min(steps, 6)
+        extra_cells = extra_cells[-1:]
+
     else:
         world = make_world()
+
+    def _log(l, cell, res):
+        print(f"[quality] l={l} cell={cell}: "
+              f"first mrr@{k_metric}="
+              f"{res.first_stage[f'mrr@{k_metric}']:.3f} "
+              f"pool_recall={res.first_stage['pool_recall']:.3f} | "
+              f"rerank mrr@{k_metric}="
+              f"{res.rerank[f'mrr@{k_metric}']:.3f} "
+              f"ndcg@{k_metric}={res.rerank[f'ndcg@{k_metric}']:.3f} "
+              f"mpr={res.rerank['mpr']:.3f}")
 
     rows = []
     for l in ls:
@@ -81,18 +111,23 @@ def run_quality(steps: int = 40, ls=QUALITY_LS, codecs=QUALITY_CODECS,
                                     seed=QUALITY_SEED)
         rows.append({"name": f"quality/l={l}/train_loss",
                      "value": float(loss), "unit": "loss"})
+        anchors = {}
         for codec in codecs:
             res = run_cascade(params, cfg, world, codec=codec, k=k,
                               k_metric=k_metric)
             rows += _rows_for(res, f"quality/l={l}/{codec}")
-            print(f"[quality] l={l} codec={codec}: "
-                  f"first mrr@{k_metric}="
-                  f"{res.first_stage[f'mrr@{k_metric}']:.3f} "
-                  f"pool_recall={res.first_stage['pool_recall']:.3f} | "
-                  f"rerank mrr@{k_metric}="
-                  f"{res.rerank[f'mrr@{k_metric}']:.3f} "
-                  f"ndcg@{k_metric}={res.rerank[f'ndcg@{k_metric}']:.3f} "
-                  f"mpr={res.rerank['mpr']:.3f}")
+            anchors[codec] = res
+            _log(l, codec, res)
+        for cell, kw in extra_cells:
+            res = run_cascade(params, cfg, world, k=k, k_metric=k_metric,
+                              **kw)
+            rows += _rows_for(res, f"quality/l={l}/{cell}")
+            _log(l, cell, res)
+            if "fp16" in anchors:      # the bytes-vs-quality headline
+                d = (anchors["fp16"].rerank[f"mrr@{k_metric}"]
+                     - res.rerank[f"mrr@{k_metric}"])
+                print(f"[quality]   {cell} rerank mrr@{k_metric} delta vs "
+                      f"fp16: {d:+.4f}")
     assert_bench_schema(rows)
     if write_bench_file or out_path:
         path = write_bench(rows, out_path or BENCH_QUALITY_PATH)

@@ -7,11 +7,18 @@ spam-filtered ~34TB; e=128 -> 5.7TB (95% reduction); fp16 -> 2.8TB (97.5%).
 TREC Disks 4&5 (Robust04): 528k docs at e=256 fp16 ~ 195GB class.
 
 Measured — a small synthetic corpus is actually encoded and written through
-``IndexBuilder`` for every codec (fp32 / fp16 / int8), with and without the
-compression layer; bytes on disk per doc are compared against the same
-§6.2 projection formula (n_tokens x bytes_per_token).  The two agree to
-the byte, which is the point: the projections in the paper's table are the
-same arithmetic the index performs.
+``IndexBuilder`` for every codec (fp32 / fp16 / int8 / pq), with and
+without the compression layer; bytes on disk per doc are compared against
+the same §6.2 projection formula (n_tokens x bytes_per_token).  The two
+agree to the byte, which is the point: the projections in the paper's
+table are the same arithmetic the index performs.  The pq codec must land
+below 0.5 B/dim/token (one uint8 code per 4-dim subvector = 0.25), the
+sub-int8 regime §6.2's table never reaches.
+
+Pruned — ``keep_frac`` builds are measured the same way: bytes on disk
+must equal the *exact* per-doc arithmetic (``sum(max(1, ceil(keep_frac *
+orig_tokens)))`` kept tokens x bytes/token), and the keep_frac-extended
+``projected_storage_bytes`` approximates it from the average.
 """
 from __future__ import annotations
 
@@ -79,20 +86,23 @@ def run_measured(n_docs: int = 48, l: int = 1,
                                        n_shards=2, batch_size=32)
                 report = builder.build(list(world.docs))
             avg_tokens = report.n_tokens / report.n_docs
+            bpt = get_codec(codec_name).bytes_per_token(rep_dim)
             projected = TermRepIndex.projected_storage_bytes(
-                report.n_docs, avg_tokens, 1,
-                get_codec(codec_name).bytes_per_token(rep_dim))
+                report.n_docs, avg_tokens, 1, bpt)
+            if codec_name == "pq":
+                # the tentpole target: sub-half-byte per stored dim
+                assert bpt / rep_dim < 0.5, (bpt, rep_dim)
             rows.append({"codec": codec_name, "compress_dim": e,
                          "rep_dim": rep_dim,
                          "measured_bytes_per_doc": report.bytes_per_doc,
                          "projected_bytes_per_doc": projected / report.n_docs,
+                         "bytes_per_dim": bpt / rep_dim,
                          "avg_tokens": avg_tokens})
             print(f"[storage] measured e={e or 'none'} codec={codec_name}: "
                   f"{report.bytes_per_doc:.0f} B/doc on disk vs "
                   f"{projected / report.n_docs:.0f} B/doc projected "
-                  f"({avg_tokens:.0f} tok/doc x "
-                  f"{get_codec(codec_name).bytes_per_token(rep_dim)} "
-                  f"B/token)")
+                  f"({avg_tokens:.0f} tok/doc x {bpt} B/token = "
+                  f"{bpt / rep_dim:.2f} B/dim)")
     # headline reduction of the measured grid: int8+compressed vs fp32 raw
     raw = next(r for r in rows
                if r["codec"] == "fp32" and r["compress_dim"] == 0)
@@ -101,12 +111,68 @@ def run_measured(n_docs: int = 48, l: int = 1,
     red = 1 - tight["measured_bytes_per_doc"] / raw["measured_bytes_per_doc"]
     print(f"[storage] measured reduction int8+e={compress_dim} vs raw fp32 "
           f"d-model: {red:.1%} (paper §6.2 class: 95-97.5%)")
+    pq = next(r for r in rows if r["codec"] == "pq" and r["compress_dim"])
+    red_pq = 1 - pq["measured_bytes_per_doc"] / raw["measured_bytes_per_doc"]
+    print(f"[storage] measured reduction pq+e={compress_dim} vs raw fp32 "
+          f"d-model: {red_pq:.1%} ({pq['bytes_per_dim']:.2f} B/dim)")
+    return rows
+
+
+def run_pruned(n_docs: int = 48, l: int = 1, compress_dim: int = 16,
+               keep_frac: float = 0.5) -> list[dict]:
+    """Token-pruned builds: bytes on disk must equal the exact per-doc
+    arithmetic, and the keep_frac-extended projection approximates it."""
+    import numpy as np
+    import jax
+
+    from repro.configs.prettr_bert import smoke_config
+    from repro.core.prettr import init_prettr
+    from repro.data.synthetic_ir import SyntheticIRWorld
+    from repro.index import IndexBuilder
+
+    cfg = smoke_config(l=l, compress_dim=compress_dim)
+    world = SyntheticIRWorld(n_docs=n_docs, n_queries=2,
+                             vocab_size=cfg.backbone.vocab_size,
+                             doc_len=cfg.max_doc_len - 2, seed=0)
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    rows = []
+    for codec_name in ("int8", "pq"):
+        with tempfile.TemporaryDirectory() as tmp:
+            builder = IndexBuilder(tmp, cfg, params, codec=codec_name,
+                                   n_shards=2, batch_size=32,
+                                   keep_frac=keep_frac)
+            report = builder.build(list(world.docs))
+            idx = TermRepIndex.open(tmp)
+            orig = np.asarray(idx.orig_doc_lengths)
+            kept = np.maximum(1, np.ceil(keep_frac * orig)).astype(np.int64)
+            np.testing.assert_array_equal(idx.doc_lengths, kept)
+            bpt = idx.bytes_per_token()
+            exact = int(kept.sum()) * bpt
+            assert report.storage_bytes == exact, \
+                (report.storage_bytes, exact)
+            projected = TermRepIndex.projected_storage_bytes(
+                report.n_docs, float(orig.mean()), 1, bpt,
+                keep_frac=keep_frac)
+        rows.append({"codec": codec_name, "keep_frac": keep_frac,
+                     "compress_dim": compress_dim,
+                     "measured_bytes_per_doc": report.bytes_per_doc,
+                     "exact_bytes_per_doc": exact / report.n_docs,
+                     "projected_bytes_per_doc": projected / report.n_docs,
+                     "avg_orig_tokens": float(orig.mean()),
+                     "avg_kept_tokens": float(kept.mean())})
+        print(f"[storage] pruned keep_frac={keep_frac} codec={codec_name}: "
+              f"{report.bytes_per_doc:.0f} B/doc on disk == exact "
+              f"{exact / report.n_docs:.0f} B/doc "
+              f"({float(orig.mean()):.0f} -> {float(kept.mean()):.1f} "
+              f"tok/doc); keep_frac projection "
+              f"{projected / report.n_docs:.0f} B/doc")
     return rows
 
 
 def run() -> list[dict]:
     rows = run_projections()
     rows += run_measured()
+    rows += run_pruned()
     return rows
 
 

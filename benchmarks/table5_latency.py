@@ -200,7 +200,12 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
       K/V streams quantized): the cache pools hold raw int8 bytes in
       ``page_tokens``-token pages with per-batch page-table bucketing, and
       the join kernel dequantizes in-register — no standalone decode
-      dispatch anywhere (``decode_dispatch = 0``).
+      dispatch anywhere (``decode_dispatch = 0``);
+    * **fused_int8_pruned** — the int8-paged configuration over a
+      ``keep_frac=0.5`` token-pruned build of the same corpus: half the
+      stored tokens per doc, served at the index's pruned ``max_doc_len``
+      (half-width padded joins, half the bytes at every stage — the
+      "shrink the stored document itself" operating point).
 
     Then the **scale-out curve**: the *fused* configuration served through
     the ``RankingRouter`` at each of ``shard_counts`` workers
@@ -274,6 +279,7 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
     with tempfile.TemporaryDirectory() as tmp:
         fp_dir = _os.path.join(tmp, "float")
         q_dir = _os.path.join(tmp, "int8")
+        p_dir = _os.path.join(tmp, "int8_pruned")
         IndexBuilder(fp_dir, cfg, params, codec=codec, n_shards=n_shards,
                      batch_size=64,
                      store_layer_kv=store_layer_kv).build(doc_lists)
@@ -281,8 +287,13 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
                      batch_size=64, store_layer_kv=store_layer_kv,
                      kv_codec="int8" if store_layer_kv else None,
                      ).build(doc_lists)
+        IndexBuilder(p_dir, cfg, params, codec="int8", n_shards=n_shards,
+                     batch_size=64, store_layer_kv=store_layer_kv,
+                     kv_codec="int8" if store_layer_kv else None,
+                     keep_frac=0.5).build(doc_lists)
         idx = TermRepIndex.open(fp_dir)
         idx8 = TermRepIndex.open(q_dir)
+        idx8p = TermRepIndex.open(p_dir)
 
         configs = [
             ("legacy", idx, dict(fused=False, use_layer_kv=False)),
@@ -290,10 +301,17 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
             ("fused_int8_paged", idx8,
              dict(fused=True, doc_cache_mb=doc_cache_mb,
                   page_tokens=page_tokens, page_bucket=True)),
+            ("fused_int8_pruned", idx8p,
+             dict(fused=True, doc_cache_mb=doc_cache_mb,
+                  page_tokens=page_tokens, page_bucket=True)),
         ]
         results = {}
+        import dataclasses as _dc
         for name, index, kw in configs:
-            svc = RankingService(params, cfg, index,
+            # a pruned index serves at its own (shorter) padded doc shape
+            scfg = (_dc.replace(cfg, max_doc_len=index.max_doc_len)
+                    if 0 < index.max_doc_len < cfg.max_doc_len else cfg)
+            svc = RankingService(params, scfg, index,
                                  micro_batch=micro_batch, **kw)
             r = _drive_service(svc, queries, cand_lists, concurrency)
             results[name] = r
@@ -351,8 +369,13 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
                / max(1e-9, results["fused"]["qps"]))
     rows.append({"name": "serving/int8_paged_over_fused_qps",
                  "value": paged_x, "unit": "x"})
+    pruned_x = (results["fused_int8_pruned"]["qps"]
+                / max(1e-9, results["fused_int8_paged"]["qps"]))
+    rows.append({"name": "serving/int8_pruned_over_int8_paged_qps",
+                 "value": pruned_x, "unit": "x"})
     print(f"[table5] fused+cache vs legacy QPS: {speedup:.2f}x; "
-          f"int8+paged vs fused QPS: {paged_x:.2f}x")
+          f"int8+paged vs fused QPS: {paged_x:.2f}x; "
+          f"pruned vs int8+paged QPS: {pruned_x:.2f}x")
     if write_bench:
         path = write_bench_serving(rows)
         print(f"[table5] wrote {len(rows)} rows -> {path}")

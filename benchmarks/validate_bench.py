@@ -1,11 +1,15 @@
 """Validate every committed ``BENCH_*.json`` trajectory file at the repo
 root against the shared row schema (``benchmarks.common.
 assert_bench_schema``), plus file-specific structural checks — for
-``BENCH_serving.json``, the scale-out ``serving/sharded/*`` curve.  CI
-runs this on every push so a malformed trajectory file — wrong keys, NaN
-values, duplicate row names, truncated JSON, a sharded curve missing a
-shard count or its efficiency row — fails fast instead of silently
-breaking the next PR's diff.
+``BENCH_serving.json``, the scale-out ``serving/sharded/*`` curve and the
+per-configuration QPS rows (including the pruned-index row); for the
+committed ``BENCH_quality.json`` (exact basename — the CI fast-smoke file
+is exempt), the ``quality/l=<l>/<cell>/<stage>/<metric>`` grid:
+complete and consistent cells, a ``train_loss`` row per ``l``, and the
+pq / pruned operating-point cells present.  CI runs this on every push so
+a malformed trajectory file — wrong keys, NaN values, duplicate row
+names, truncated JSON, a curve missing a shard count or its efficiency
+row — fails fast instead of silently breaking the next PR's diff.
 
 Usage: PYTHONPATH=src python -m benchmarks.validate_bench [files...]
 (default: glob BENCH_*.json at the repo root; exits non-zero on any
@@ -75,6 +79,94 @@ def validate_serving_rows(rows: list[dict]) -> list[str]:
         problems.append(
             "missing serving/fused/qps: sharded/1 has no single-process "
             "row to be compared against")
+    if "serving/fused_int8_pruned/qps" not in names:
+        problems.append(
+            "missing serving/fused_int8_pruned/qps: the token-pruned "
+            "operating point has no gated throughput row "
+            "(benchmarks.table5_latency.run_service writes it)")
+    return problems
+
+
+_QUALITY_METRIC = re.compile(
+    r"^quality/l=(\d+)/([\w.]+)/(first_stage|rerank)/([\w@]+)$")
+_QUALITY_LOSS = re.compile(r"^quality/l=(\d+)/train_loss$")
+
+
+def validate_quality_rows(rows: list[dict]) -> list[str]:
+    """Structural checks specific to the committed ``BENCH_quality.json``
+    -> list of violation strings (empty = valid).
+
+    The quality grid must be complete and consistent: every
+    ``quality/l=<l>/<cell>/<stage>/<metric>`` cell carries both cascade
+    stages with one shared metric set (``first_stage`` additionally holds
+    ``pool_recall``), every ``l`` has its informational ``train_loss``
+    row and the same cell set as every other ``l``, and the pq / pruned
+    serving operating points are present — a regenerated baseline that
+    silently dropped them would un-gate the tentpole's quality claim."""
+    problems: list[str] = []
+    cells: dict[tuple[int, str], dict[str, set]] = {}
+    losses: set[int] = set()
+    for n in (r["name"] for r in rows):
+        m = _QUALITY_LOSS.match(n)
+        if m:
+            losses.add(int(m.group(1)))
+            continue
+        m = _QUALITY_METRIC.match(n)
+        if m is None:
+            problems.append(f"unrecognized quality row {n!r} (expected "
+                            f"quality/l=<l>/<cell>/<stage>/<metric> or "
+                            f"quality/l=<l>/train_loss)")
+            continue
+        l, cell, stage, metric = m.groups()
+        cells.setdefault((int(l), cell), {}).setdefault(
+            stage, set()).add(metric)
+    if not cells:
+        problems.append(
+            "no quality/l=<l>/<cell>/<stage>/<metric> rows: the cascade "
+            "grid is missing (benchmarks.quality.run_quality writes it)")
+        return problems
+    by_l: dict[int, set] = {}
+    for (l, cell) in cells:
+        by_l.setdefault(l, set()).add(cell)
+    for l in sorted(set(by_l) - losses):
+        problems.append(f"l={l} has metric rows but no "
+                        f"quality/l={l}/train_loss row")
+    ref_l = min(by_l)
+    for l in sorted(by_l)[1:]:
+        if by_l[l] != by_l[ref_l]:
+            problems.append(
+                f"cell drift across join layers: l={l} has "
+                f"{sorted(by_l[l] ^ by_l[ref_l])} differing from l={ref_l}")
+    ref_rerank = None
+    for (l, cell), stages in sorted(cells.items()):
+        for stage in ("first_stage", "rerank"):
+            if stage not in stages:
+                problems.append(f"quality/l={l}/{cell} has no {stage} rows")
+        if "rerank" in stages:
+            if ref_rerank is None:
+                ref_rerank = stages["rerank"]
+            elif stages["rerank"] != ref_rerank:
+                problems.append(
+                    f"metric drift: quality/l={l}/{cell}/rerank has "
+                    f"{sorted(stages['rerank'] ^ ref_rerank)} differing "
+                    f"from the first cell")
+        if "first_stage" in stages and "rerank" in stages:
+            missing = stages["rerank"] - stages["first_stage"]
+            if missing:
+                problems.append(
+                    f"quality/l={l}/{cell}/first_stage is missing "
+                    f"{sorted(missing)} present in its rerank rows")
+            if "pool_recall" not in stages["first_stage"]:
+                problems.append(
+                    f"quality/l={l}/{cell}/first_stage has no pool_recall "
+                    f"row (the cascade's recall ceiling)")
+    all_cells = set().union(*by_l.values())
+    for required in ("pq", "int8_pruned"):
+        if required not in all_cells:
+            problems.append(
+                f"missing quality cell {required!r}: the "
+                f"{'product-quantized' if required == 'pq' else 'pruned'} "
+                f"operating point has no gated quality rows")
     return problems
 
 
@@ -96,6 +188,8 @@ def main(argv: list[str] | None = None) -> int:
         problems = []
         if os.path.basename(path) == "BENCH_serving.json":
             problems = validate_serving_rows(rows)
+        elif os.path.basename(path) == "BENCH_quality.json":
+            problems = validate_quality_rows(rows)
         for p in problems:
             print(f"FAIL {os.path.basename(path)}: {p}")
             failed += 1

@@ -271,6 +271,52 @@ def _decode_doc_store(params, cfg: PreTTRConfig, doc_store):
     return doc_store.astype(bcfg.compute_dtype)
 
 
+def doc_salience(params, cfg: PreTTRConfig, doc_store, doc_valid):
+    """Index-time token salience for pruning: the attention mass each
+    stored doc token *receives* at join layer ``l`` from the other tokens
+    of its own document (layer-wise token compression, in the spirit of
+    arXiv 2605.20683 — a token no other doc token attends to is unlikely
+    to matter to the query either).
+
+    ``doc_store``: [N, Ld, e|d] exactly as :func:`precompute_docs`
+    returned it (round-trip included — the salience must rank the tokens
+    the join will actually see).  Computes the layer-``l`` doc-side Q/K
+    by the same ops the join runs (:func:`repro.models.transformer`'s
+    ``project_q``/``project_kv``), softmaxes each valid query row over
+    the valid keys, and sums the weight landing on every key position:
+    returns [N, Ld] float32, 0 at invalid positions.
+
+    Positionally sound for learned-position backbones only (the join
+    layers consume positions exclusively through RoPE, which PreTTR's
+    BERT config disables); ``IndexBuilder`` rejects pruning on RoPE
+    backbones because dropped rows would shift the rope phases of every
+    survivor."""
+    bcfg = cfg.backbone
+    x_d = _decode_doc_store(params, cfg, doc_store)
+    n, ld, _ = x_d.shape
+    pos_d = jnp.broadcast_to(cfg.max_query_len + jnp.arange(ld), (n, ld))
+    lp = jax.tree.map(lambda a: a[cfg.l], params["backbone"]["layers"])
+    h_d = L.apply_norm(lp["ln1"], x_d, bcfg.norm)
+    rope_base = bcfg.layer_rope_bases()[cfg.l]
+    q = T.project_q(lp["attn"], h_d, bcfg, positions=pos_d,
+                    rope_base=rope_base)                    # [N, Ld, H, Dh]
+    k, _ = T.project_kv(lp["attn"], h_d, bcfg, positions=pos_d,
+                        rope_base=rope_base)                # [N, Ld, Hkv, Dh]
+    if bcfg.n_kv_heads != bcfg.n_heads:                     # GQA: widen keys
+        k = jnp.repeat(k, bcfg.n_heads // bcfg.n_kv_heads, axis=2)
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    logits = jnp.einsum("nqhd,nkhd->nhqk", q, k) / jnp.sqrt(
+        jnp.float32(bcfg.dh))
+    v = jnp.asarray(doc_valid, bool)
+    # finite mask (not -inf): an all-pad row would softmax to NaN and
+    # poison the row-drop product below
+    logits = jnp.where(v[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)                     # [N, H, Lq, Lk]
+    w = jnp.where(v[:, None, :, None], w, 0.0)              # drop pad rows
+    return (w.sum(axis=2).mean(axis=1) * v).astype(jnp.float32)
+
+
 @dataclasses.dataclass
 class PagedDocKV:
     """Stored layer-``l`` doc K/V living in the device doc cache's

@@ -66,7 +66,9 @@ def run_cascade(params, cfg: P.PreTTRConfig, world: SyntheticIRWorld, *,
                 n_shards: int = 1, micro_batch: int = 32,
                 index_dir: str | None = None, index: TermRepIndex | None = None,
                 pool: str = "mean", backend: str | None = None,
-                store_layer_kv: bool = False) -> CascadeResult:
+                store_layer_kv: bool = False,
+                kv_codec: str | None = None, keep_frac: float = 1.0,
+                max_kept_tokens: int = 0) -> CascadeResult:
     """Run the full retrieval cascade over ``world`` and score both stages.
 
     Builds a ``codec``-encoded index from ``world.docs`` (into
@@ -74,13 +76,25 @@ def run_cascade(params, cfg: P.PreTTRConfig, world: SyntheticIRWorld, *,
     build), retrieves ``k`` candidates per query with the pooled
     first-stage retriever, reranks them through a packed
     ``RankingService``, and returns per-stage metrics at depth
-    ``k_metric``."""
+    ``k_metric``.
+
+    ``kv_codec`` (with ``store_layer_kv``) evaluates the int8-KV serving
+    operating point — the service consumes the stored, codec-encoded
+    layer-``l`` K/V exactly as production does.  ``keep_frac`` /
+    ``max_kept_tokens`` build a token-pruned index; the serving stages
+    then run at the index's *pruned* ``max_doc_len`` (shorter padded
+    shapes, the same FLOP cut production gets)."""
     if backend is not None:     # one backend family for every stage
         from repro.models.backend import apply_backend
         cfg = apply_backend(cfg, backend)
 
     def _run(idx: TermRepIndex) -> CascadeResult:
-        fs = FirstStageRetriever(params, cfg, idx, pool=pool)
+        # a pruned index caps stored doc lengths below the build config's
+        # max_doc_len — serve at the pruned shape
+        scfg = cfg
+        if 0 < idx.max_doc_len < cfg.max_doc_len:
+            scfg = dataclasses.replace(cfg, max_doc_len=idx.max_doc_len)
+        fs = FirstStageRetriever(params, scfg, idx, pool=pool)
         q_tokens, q_valid = pack_query_batch(world.queries,
                                              cfg.max_query_len)
         cand_ids, cand_scores = (np.asarray(a) for a in
@@ -94,7 +108,7 @@ def run_cascade(params, cfg: P.PreTTRConfig, world: SyntheticIRWorld, *,
         first_stage["pool_recall"] = float(M.recall_at_k(
             ranked, n_valid, k, world.n_relevant()).mean())
 
-        svc = RankingService(params, cfg, idx, micro_batch=micro_batch)
+        svc = RankingService(params, scfg, idx, micro_batch=micro_batch)
         for qi in range(world.n_queries):
             svc.submit(RankRequest(q_tokens[qi], q_valid[qi],
                                    [int(d) for d in cand_ids[qi]],
@@ -111,7 +125,9 @@ def run_cascade(params, cfg: P.PreTTRConfig, world: SyntheticIRWorld, *,
         meta = {"codec": idx.codec.name, "l": cfg.l, "k": k,
                 "k_metric": k_metric, "n_docs": world.n_docs,
                 "n_queries": world.n_queries, "seed": world.seed,
-                "pool": pool, "n_shards": idx.n_shards}
+                "pool": pool, "n_shards": idx.n_shards,
+                "kv_codec": (idx.kv_codec.name if idx.kv_codec else None),
+                "prune": idx.prune_policy}
         return CascadeResult(first_stage=first_stage, rerank=rerank,
                              meta=meta)
 
@@ -121,6 +137,8 @@ def run_cascade(params, cfg: P.PreTTRConfig, world: SyntheticIRWorld, *,
         out_dir = index_dir or tmp
         builder = IndexBuilder(out_dir, cfg, params, codec=codec,
                                n_shards=n_shards,
-                               store_layer_kv=store_layer_kv)
+                               store_layer_kv=store_layer_kv,
+                               kv_codec=kv_codec, keep_frac=keep_frac,
+                               max_kept_tokens=max_kept_tokens)
         builder.build(list(world.docs))
         return _run(TermRepIndex.open(out_dir))

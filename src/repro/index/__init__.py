@@ -1,10 +1,11 @@
 """PreTTR term-representation index: codec registry, offline sharded
 builder, and the multi-shard reader."""
-from repro.index.builder import BuildReport, IndexBuilder, verify_index
+from repro.index.builder import (BuildReport, IndexBuilder, prune_selection,
+                                 verify_index)
 from repro.index.codecs import (StorageCodec, available_codecs, get_codec,
                                 register_codec)
 from repro.index.store import IndexFormatError, TermRepIndex
 
 __all__ = ["TermRepIndex", "IndexFormatError", "IndexBuilder", "BuildReport",
-           "verify_index", "StorageCodec", "available_codecs", "get_codec",
-           "register_codec"]
+           "verify_index", "prune_selection", "StorageCodec",
+           "available_codecs", "get_codec", "register_codec"]

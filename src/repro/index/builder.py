@@ -21,9 +21,27 @@ a corpus and writes a format-v2 index (``manifest.msgpack`` +
   each shard directory gets one append-only file per codec stream plus its
   row in the manifest, written once at finalize.
 
+* **Trained codecs** — a codec with ``needs_fit`` (the ``"pq"`` product
+  quantizer) gets a fit pass first: a prefix sample of the corpus is
+  encoded through the same fixed-shape jit, the valid-token reps are
+  collected host-side, and the fitted state lands in the manifest's
+  ``codec_state`` key (the codebook-in-manifest contract in
+  ``repro.index.codecs``).
+* **Index-time token pruning** — ``keep_frac`` / ``max_kept_tokens``
+  switch on a salience pass (:func:`repro.core.prettr.doc_salience`:
+  attention mass received at join layer ``l``) and only each doc's
+  highest-salience tokens are written; the manifest records the policy
+  under ``prune``, each shard's pre-pruning token counts under
+  ``orig_lengths``, and ``max_doc_len`` as the *pruned* cap, so serving
+  configs can shrink their padded doc shapes to match.  Rejected for
+  RoPE backbones (dropping rows would shift every survivor's rope
+  phase); PreTTR's BERT bakes learned positions into the stored reps at
+  embed time, so surviving rows keep their exact joint-forward values.
+
 :func:`verify_index` re-encodes a sample of documents and checks the stored
 streams byte-for-byte (codecs are deterministic, so this is exact for every
-codec, int8 included).
+codec, int8 and pq included; prune selections replay via the same salience
+jit at the build's batch shape).
 """
 from __future__ import annotations
 
@@ -71,6 +89,22 @@ def shard_ranges(n_docs: int, n_shards: int) -> list[tuple[int, int]]:
     return [(int(bounds[i]), int(bounds[i + 1])) for i in range(n_shards)]
 
 
+def prune_selection(salience: np.ndarray, n_tokens: int, keep_frac: float,
+                    max_kept_tokens: int) -> np.ndarray:
+    """Token indices a prune policy keeps for one doc, in ascending
+    (original) order: the ``max(1, ceil(keep_frac * n))`` highest-salience
+    tokens, capped by ``max_kept_tokens`` when > 0.  Stable argsort with
+    first-index tie-breaks, so the selection is bit-deterministic given
+    the salience floats — ``verify_index`` replays it exactly."""
+    n = int(n_tokens)
+    keep = max(1, int(np.ceil(keep_frac * n)))
+    if max_kept_tokens > 0:
+        keep = min(keep, int(max_kept_tokens))
+    keep = max(1, min(keep, n))
+    order = np.argsort(-np.asarray(salience[:n], np.float32), kind="stable")
+    return np.sort(order[:keep])
+
+
 class _ShardWriter:
     """Append-only writer for one shard directory: one open file per
     per-token stream (the codec's, plus the optional layer-l K/V pair),
@@ -84,11 +118,15 @@ class _ShardWriter:
             name: open(os.path.join(self.path, f"{name}.bin"), "wb")
             for name in stream_names}
         self.lengths: list[int] = []
+        self.orig_lengths: list[int] = []
 
-    def append(self, parts: dict[str, np.ndarray], n_tokens: int):
+    def append(self, parts: dict[str, np.ndarray], n_tokens: int,
+               orig_tokens: int | None = None):
         for name, h in self._handles.items():
             h.write(np.ascontiguousarray(parts[name]).tobytes())
         self.lengths.append(int(n_tokens))
+        self.orig_lengths.append(int(orig_tokens if orig_tokens is not None
+                                     else n_tokens))
 
     def close(self):
         for h in self._handles.values():
@@ -96,9 +134,12 @@ class _ShardWriter:
             os.fsync(h.fileno())
             h.close()
 
-    def manifest_row(self) -> dict:
-        return {"dir": self.dir_name, "n_docs": len(self.lengths),
-                "lengths": self.lengths}
+    def manifest_row(self, with_orig: bool = False) -> dict:
+        row = {"dir": self.dir_name, "n_docs": len(self.lengths),
+               "lengths": self.lengths}
+        if with_orig:
+            row["orig_lengths"] = self.orig_lengths
+        return row
 
 
 class IndexBuilder:
@@ -126,17 +167,42 @@ class IndexBuilder:
     int8 payload plus per-token fp32 scale streams
     (``layer_k_scales``/``layer_v_scales``) that serving ships to the
     device undecoded and the join kernel dequantizes in-register.
+    ``keep_frac`` / ``max_kept_tokens`` switch on index-time token
+    pruning: a :func:`repro.core.prettr.doc_salience` pass scores every
+    stored token and only the survivors of :func:`prune_selection` are
+    written (shorter ``doc_lengths`` end to end; manifest ``prune`` +
+    per-shard ``orig_lengths`` keep the accounting exact).  A codec with
+    ``needs_fit`` (pq) is trained on the reps of the first ``fit_sample``
+    docs before anything is encoded (``fit_seed`` seeds the k-means).
     """
 
     def __init__(self, out_dir: str, cfg: P.PreTTRConfig, params, *,
                  codec: str | StorageCodec = "fp16", n_shards: int = 1,
                  batch_size: int = 64, mesh=None, writer_depth: int = 2,
                  backend: str | None = None, store_layer_kv: bool = False,
-                 kv_codec: str | StorageCodec | None = None):
+                 kv_codec: str | StorageCodec | None = None,
+                 keep_frac: float = 1.0, max_kept_tokens: int = 0,
+                 fit_sample: int = 256, fit_seed: int = 0):
         if backend is not None:
             from repro.models.backend import apply_backend
             cfg = apply_backend(cfg, backend)
         self.codec = get_codec(codec) if isinstance(codec, str) else codec
+        if not 0.0 < keep_frac <= 1.0:
+            raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
+        if max_kept_tokens < 0:
+            raise ValueError(
+                f"max_kept_tokens must be >= 0, got {max_kept_tokens}")
+        self.keep_frac = float(keep_frac)
+        self.max_kept_tokens = int(max_kept_tokens)
+        self.prune = keep_frac < 1.0 or max_kept_tokens > 0
+        if self.prune and cfg.backbone.rope:
+            raise ValueError(
+                "token pruning requires a learned-position backbone: the "
+                "join layers rope surviving rows by their *pruned* index, "
+                "which would shift every survivor's phase (rope=False for "
+                "PreTTR's BERT config)")
+        self._fit_sample = max(1, int(fit_sample))
+        self._fit_seed = int(fit_seed)
         # the optional layer-l K/V streams keep the *model's* storage dtype
         # (raw float projections) unless a kv_codec re-encodes them
         self.store_layer_kv = bool(store_layer_kv)
@@ -182,6 +248,18 @@ class IndexBuilder:
         self._encode_kv_raw = jax.jit(
             lambda p, parts: P.precompute_doc_kv(
                 p, self.cfg, self.codec.decode(parts)))
+        # pruned cap: what the manifest records as max_doc_len, so serving
+        # configs (and gather_raw's default pad) shrink to the kept shape;
+        # policy-derived (not data-derived) so it's known before the build
+        cap = int(cfg.max_doc_len)
+        if self.prune:
+            cap = min(cap, int(np.ceil(self.keep_frac * cap)))
+            if self.max_kept_tokens > 0:
+                cap = min(cap, self.max_kept_tokens)
+        self.pruned_max_doc_len = max(1, cap)
+        self._salience = jax.jit(
+            lambda p, st, v: P.doc_salience(p, self.cfg, st, v)) \
+            if self.prune else None
 
     def _batch_kv(self, reps_dev):
         """Layer-l K/V for one encoded batch, from codec-roundtripped
@@ -208,7 +286,9 @@ class IndexBuilder:
 
     # -- device side -----------------------------------------------------------
     def _device_batch(self, tokens: np.ndarray, valid: np.ndarray):
-        """Pad to the fixed batch shape, place on the mesh, encode."""
+        """Pad to the fixed batch shape, place on the mesh, encode ->
+        ``(reps, valid)`` (valid padded to the batch shape, for the
+        salience pass)."""
         n = len(tokens)
         if n < self.batch_size:
             pad = self.batch_size - n
@@ -226,7 +306,28 @@ class IndexBuilder:
                 self._params_replicated = jax.device_put(
                     params, NamedSharding(self.mesh, PS()))
             params = self._params_replicated
-        return self._encode(params, jnp.asarray(tokens), jnp.asarray(valid))
+        valid = jnp.asarray(valid)
+        return self._encode(params, jnp.asarray(tokens), valid), valid
+
+    def _fit_codec(self, docs: Sequence[np.ndarray]):
+        """Fit pass for trained codecs (pq): encode the first
+        ``fit_sample`` docs through the build's fixed-shape jit and train
+        on their valid-token reps."""
+        buf = []
+        n_fit = min(len(docs), self._fit_sample)
+        for lo in range(0, n_fit, self.batch_size):
+            chunk = docs[lo: lo + self.batch_size]
+            tokens, lengths, valid = pack_doc_batch(
+                chunk, self.cfg.max_doc_len)
+            reps_dev, _ = self._device_batch(tokens, valid)
+            reps = np.asarray(reps_dev)
+            for i, n in enumerate(lengths):
+                buf.append(np.asarray(reps[i, : int(n)], np.float32))
+        if not buf:
+            raise ValueError(
+                f"codec {self.codec.name!r} needs a fit sample but the "
+                f"corpus is empty")
+        self.codec.fit(np.concatenate(buf), seed=self._fit_seed)
 
     # -- host side (writer thread) ---------------------------------------------
     def _write_loop(self, work_q: queue.Queue, writers: list[_ShardWriter],
@@ -247,6 +348,8 @@ class IndexBuilder:
         fixed shapes here) and write the sharded v2 index."""
         t_wall = time.perf_counter()
         n_docs = len(docs)
+        if self.codec.needs_fit:
+            self._fit_codec(docs)
         ranges = shard_ranges(n_docs, self.n_shards)
         boundaries = np.asarray([lo for lo, _ in ranges], np.int64)
         writers = [_ShardWriter(self.out_dir, s, self._stream_names())
@@ -268,7 +371,10 @@ class IndexBuilder:
                 tokens, lengths, valid = pack_doc_batch(
                     chunk, self.cfg.max_doc_len)
                 t0 = time.perf_counter()
-                reps_dev = self._device_batch(tokens, valid)
+                reps_dev, valid_dev = self._device_batch(tokens, valid)
+                sal_dev = (self._salience(self._params_for_encode(),
+                                          reps_dev, valid_dev)
+                           if self.prune else None)
                 kv_dev = (self._batch_kv(reps_dev)
                           if self.store_layer_kv else None)
                 encode_s += time.perf_counter() - t0
@@ -276,16 +382,17 @@ class IndexBuilder:
                     # bounded put that never deadlocks on a dead writer
                     while not err:
                         try:
-                            work_q.put((reps_dev, kv_dev, lengths, lo),
-                                       timeout=0.1)
+                            work_q.put(
+                                (reps_dev, kv_dev, sal_dev, lengths, lo),
+                                timeout=0.1)
                             break
                         except queue.Full:
                             continue
                     if err:
                         break
                 else:                       # synchronous debug path
-                    self._write_batch(reps_dev, kv_dev, lengths, lo, writers,
-                                      boundaries, write_s)
+                    self._write_batch(reps_dev, kv_dev, sal_dev, lengths, lo,
+                                      writers, boundaries, write_s)
         finally:
             if worker is not None:
                 while worker.is_alive():
@@ -303,12 +410,24 @@ class IndexBuilder:
         manifest = {"version": FORMAT_VERSION, "codec": self.codec.name,
                     "rep_dim": self.rep_dim, "l": self.cfg.l,
                     "compressed": bool(self.cfg.compress_dim),
-                    "max_doc_len": self.cfg.max_doc_len, "n_docs": n_docs,
+                    # pruned builds record the *kept* cap so serving
+                    # configs (and gather_raw's default pad) can shrink
+                    "max_doc_len": self.pruned_max_doc_len if self.prune
+                    else self.cfg.max_doc_len,
+                    "n_docs": n_docs,
                     # XLA output differs at the ulp across *batch shapes*
                     # (not row positions), so byte-exact re-verification
                     # must replay the build's fixed shape
                     "encode_batch": self.batch_size,
-                    "shards": [w.manifest_row() for w in writers]}
+                    "shards": [w.manifest_row(with_orig=self.prune)
+                               for w in writers]}
+        state = self.codec.state_dict()
+        if state is not None:
+            manifest["codec_state"] = state
+        if self.prune:
+            manifest["prune"] = {"keep_frac": self.keep_frac,
+                                 "max_kept_tokens": self.max_kept_tokens,
+                                 "layer": self.cfg.l}
         if self.store_layer_kv:
             manifest["layer_kv"] = {"dtype": self._kv_payload_dtype.str,
                                     "d_kv": self.kv_dim}
@@ -331,13 +450,17 @@ class IndexBuilder:
         return (self._params_replicated
                 if self._params_replicated is not None else self.params)
 
-    def _write_batch(self, reps_dev, kv_dev, lengths, doc_lo, writers,
-                     boundaries, write_s):
+    def _write_batch(self, reps_dev, kv_dev, sal_dev, lengths, doc_lo,
+                     writers, boundaries, write_s):
         """Materialize one device batch and append it to its shards.  The
         ``np.asarray`` blocks on the device — in the threaded path
-        everything after it overlaps the device encoding the next batch."""
+        everything after it overlaps the device encoding the next batch.
+        When pruning, each doc's surviving token rows are sliced here
+        (encode and the K/V projections are per-token, so slicing before
+        or after them is byte-identical)."""
         t0 = time.perf_counter()
         reps = np.asarray(reps_dev)
+        sal = np.asarray(sal_dev) if sal_dev is not None else None
         kv = None
         if kv_dev is not None:
             kv = (np.asarray(kv_dev[0]).astype(self._kv_dtype),
@@ -345,17 +468,22 @@ class IndexBuilder:
         for i, n in enumerate(lengths):
             shard = int(np.searchsorted(boundaries, doc_lo + i,
                                         side="right") - 1)
-            parts = self.codec.encode(reps[i, : int(n)])
+            n = int(n)
+            rows = (prune_selection(sal[i], n, self.keep_frac,
+                                    self.max_kept_tokens)
+                    if sal is not None else slice(None, n))
+            parts = self.codec.encode(reps[i, rows])
             if kv is not None:
                 if self.kv_codec is not None:
                     parts.update(self.kv_codec.encode_group(
-                        "layer_k", kv[0][i, : int(n)]))
+                        "layer_k", kv[0][i, rows]))
                     parts.update(self.kv_codec.encode_group(
-                        "layer_v", kv[1][i, : int(n)]))
+                        "layer_v", kv[1][i, rows]))
                 else:
-                    parts["layer_k"] = kv[0][i, : int(n)]
-                    parts["layer_v"] = kv[1][i, : int(n)]
-            writers[shard].append(parts, int(n))
+                    parts["layer_k"] = kv[0][i, rows]
+                    parts["layer_v"] = kv[1][i, rows]
+            kept = len(rows) if sal is not None else n
+            writers[shard].append(parts, kept, orig_tokens=n)
         write_s[0] += time.perf_counter() - t0
 
 
@@ -383,6 +511,10 @@ def verify_index(index: TermRepIndex, cfg: P.PreTTRConfig, params,
     encode_kv = jax.jit(lambda p, st: P.precompute_doc_kv(p, vcfg, st))
     encode_kv_raw = jax.jit(lambda p, parts: P.precompute_doc_kv(
         p, vcfg, codec.decode(parts)))
+    prune = getattr(index, "prune_policy", None)
+    salience = (jax.jit(lambda p, st, v: P.doc_salience(p, vcfg, st, v))
+                if prune else None)
+    orig_lens = np.asarray(index.orig_doc_lengths)
     parts, got_valid = index.gather_raw([int(i) for i in ids],
                                         pad_to=cfg.max_doc_len)
     kv_codec = index.kv_codec
@@ -402,6 +534,8 @@ def verify_index(index: TermRepIndex, cfg: P.PreTTRConfig, params,
                 [valid, np.zeros((pad, valid.shape[1]), bool)])
         reps_dev = encode(params, jnp.asarray(tokens), jnp.asarray(valid))
         reps = np.asarray(reps_dev)
+        sal = (np.asarray(salience(params, reps_dev, jnp.asarray(valid)))
+               if salience is not None else None)
         kv = None
         if index.has_layer_kv:
             if codec.decode_is_identity:
@@ -413,20 +547,31 @@ def verify_index(index: TermRepIndex, cfg: P.PreTTRConfig, params,
                   np.asarray(kv_dev[1]).astype(kv_dtype))
         for i, (n_tok, rep) in enumerate(zip(lengths, reps)):
             row = lo + i
-            want = codec.encode(rep[: int(n_tok)])
+            n_tok = int(n_tok)
+            if sal is not None:       # replay the build's prune selection
+                rows = prune_selection(sal[i], n_tok, prune["keep_frac"],
+                                       prune["max_kept_tokens"])
+                stored = len(rows)
+                assert orig_lens[ids[row]] == n_tok, (
+                    f"doc {ids[row]} orig_lengths={orig_lens[ids[row]]} "
+                    f"but the doc packs to {n_tok} tokens")
+            else:
+                rows = slice(None, n_tok)
+                stored = n_tok
+            want = codec.encode(rep[rows])
             if kv is not None:
                 if kv_codec is not None:
                     want.update(kv_codec.encode_group(
-                        "layer_k", kv[0][i, : int(n_tok)]))
+                        "layer_k", kv[0][i, rows]))
                     want.update(kv_codec.encode_group(
-                        "layer_v", kv[1][i, : int(n_tok)]))
+                        "layer_v", kv[1][i, rows]))
                 else:
-                    want["layer_k"] = kv[0][i, : int(n_tok)]
-                    want["layer_v"] = kv[1][i, : int(n_tok)]
+                    want["layer_k"] = kv[0][i, rows]
+                    want["layer_v"] = kv[1][i, rows]
             for name, arr in want.items():
                 np.testing.assert_array_equal(
-                    parts[name][row, : int(n_tok)], arr,
+                    parts[name][row, :stored], arr,
                     err_msg=f"doc {ids[row]} stream {name!r} mismatch")
-            assert int(got_valid[row].sum()) == int(n_tok), \
+            assert int(got_valid[row].sum()) == stored, \
                 f"doc {ids[row]} stored length mismatch"
     return len(ids)

@@ -28,6 +28,24 @@ model's float representations and those streams:
   keeps the fp16 path bit-exact.
 * ``bytes_per_token(rep_dim)`` — storage accounting (§6.2), summed over
   streams.
+
+Codebook-in-manifest contract (stateful codecs)
+-----------------------------------------------
+Most codecs are stateless — ``get_codec(name)`` returns a ready instance.
+A *trained* codec (the product-quantization ``"pq"``) carries state that
+must travel with the index it encoded:
+
+* ``needs_fit`` is True until ``fit(sample)`` has been called with a
+  ``[T, rep_dim]`` float sample of term reps; the builder runs this fit
+  pass over a prefix of the corpus before encoding anything.
+* ``state_dict()`` returns a msgpack-safe dict (or ``None`` for stateless
+  codecs).  The builder stores it under the manifest's ``codec_state``
+  key, next to the ``codec`` name — codebooks live *in the manifest*, not
+  in a side file, so an index directory stays self-describing.
+* ``TermRepIndex`` calls ``load_state_dict(manifest["codec_state"])``
+  right after ``get_codec(manifest["codec"])``, before the stream spec is
+  consulted — a reopened index decodes with exactly the codebooks it was
+  built with, and ``verify_index`` can replay encode byte-exactly.
 """
 from __future__ import annotations
 
@@ -86,6 +104,24 @@ class StorageCodec:
     #: decode() returns parts["reps"] unchanged — serving may skip it and
     #: feed the stored bytes straight to the join (bit-exact path).
     decode_is_identity = True
+    #: True until fit() has been called (trained codecs only) — the
+    #: builder runs a sample fit pass before encoding when set.
+    needs_fit = False
+
+    def fit(self, sample: np.ndarray, *, seed: int = 0) -> None:
+        """Train codec state on a ``[T, rep_dim]`` float sample (no-op for
+        stateless codecs)."""
+
+    def state_dict(self) -> dict | None:
+        """Msgpack-safe serialized state for the manifest's
+        ``codec_state`` key; None for stateless codecs."""
+        return None
+
+    def load_state_dict(self, state: dict) -> None:
+        if state:
+            raise ValueError(
+                f"codec {self.name!r} is stateless but the manifest "
+                f"carries codec_state")
 
     #: dtype the builder should materialize model outputs in before
     #: encode() — quantizing codecs want full-precision inputs.
@@ -171,3 +207,162 @@ class Int8Codec(StorageCodec):
         # works on numpy and on jnp tracers: astype + broadcast only
         return (parts[group].astype(np.float32)
                 * parts[self.scale_stream(group)][..., None])
+
+
+@register_codec
+class PQCodec(StorageCodec):
+    """Product quantization in the spirit of SDR (Cohen et al., 2021):
+    each stored token's ``e`` dims split into ``e / sub_dim`` subvectors,
+    each encoded as the uint8 id of its nearest centroid in a per-subspace
+    codebook of ``n_centroids`` entries — ``sub_dim=4`` stores 0.25
+    bytes/dim, 4x below the int8 codec's 1 byte/dim floor.
+
+    Codebooks are k-means-trained on a sample of term reps at build time
+    (``IndexBuilder`` runs the fit pass) and serialized into the index
+    manifest via ``state_dict()`` (see the module docstring's
+    codebook-in-manifest contract).  Decode is a pure gather — codebook
+    lookup — that runs on numpy hosts *and* inside jitted device code
+    (serving ships the uint8 code stream over H2D and widens on device,
+    the same seam the int8 codec uses; the codebooks become a jit
+    constant).  Only the ``"reps"`` group is supported: layer-K/V streams
+    keep their own ``kv_codec`` (fp16/int8 feed the join kernels
+    directly; a PQ'd K/V stream would force a pre-join decode)."""
+    name = "pq"
+    decode_is_identity = False
+
+    def __init__(self, sub_dim: int = 4, n_centroids: int = 256,
+                 codebooks: np.ndarray | None = None):
+        if not 0 < n_centroids <= 256:
+            raise ValueError(
+                f"n_centroids must fit a uint8 code (1..256), got "
+                f"{n_centroids}")
+        self.sub_dim = int(sub_dim)
+        self.n_centroids = int(n_centroids)
+        self.codebooks = None
+        if codebooks is not None:
+            self._set_codebooks(np.asarray(codebooks, np.float32))
+
+    @property
+    def needs_fit(self):
+        return self.codebooks is None
+
+    @property
+    def encode_dtype(self):
+        return np.float32                 # quantize from full precision
+
+    def _set_codebooks(self, cb: np.ndarray) -> None:
+        if cb.ndim != 3 or cb.shape[1] != self.n_centroids \
+                or cb.shape[2] != self.sub_dim:
+            raise ValueError(
+                f"codebooks must be [n_sub, {self.n_centroids}, "
+                f"{self.sub_dim}], got {cb.shape}")
+        self.codebooks = np.ascontiguousarray(cb, np.float32)
+
+    def _n_sub(self, rep_dim: int) -> int:
+        if rep_dim % self.sub_dim:
+            raise ValueError(
+                f"pq codec needs rep_dim divisible by sub_dim="
+                f"{self.sub_dim}, got rep_dim={rep_dim}")
+        return rep_dim // self.sub_dim
+
+    def _require_fit(self) -> np.ndarray:
+        if self.codebooks is None:
+            raise ValueError(
+                "pq codec has no codebooks: call fit() on a term-rep "
+                "sample (IndexBuilder does this automatically) or open "
+                "an index whose manifest carries codec_state")
+        return self.codebooks
+
+    # -- training -------------------------------------------------------------
+    def fit(self, sample: np.ndarray, *, seed: int = 0,
+            iters: int = 8) -> None:
+        """Deterministic per-subspace Lloyd k-means on ``[T, rep_dim]``
+        floats (first-index tie-breaks; empty clusters keep their old
+        centroid), seeded by ``seed``."""
+        sample = np.asarray(sample, np.float32)
+        if sample.ndim != 2 or not sample.size:
+            raise ValueError(
+                f"fit() wants a non-empty [T, rep_dim] sample, got shape "
+                f"{sample.shape}")
+        m = self._n_sub(sample.shape[1])
+        t, k = sample.shape[0], self.n_centroids
+        rng = np.random.default_rng(seed)
+        books = np.empty((m, k, self.sub_dim), np.float32)
+        for s in range(m):
+            x = sample[:, s * self.sub_dim:(s + 1) * self.sub_dim]
+            cent = x[rng.choice(t, size=k, replace=t < k)].copy()
+            for _ in range(max(1, int(iters))):
+                assign = self._nearest(x, cent)
+                for c in range(k):
+                    sel = x[assign == c]
+                    if len(sel):
+                        cent[c] = sel.mean(axis=0)
+            books[s] = cent
+        self.codebooks = books
+
+    @staticmethod
+    def _nearest(x: np.ndarray, cent: np.ndarray) -> np.ndarray:
+        # ||x - c||^2 up to the x^2 term; argmin ties break to the first
+        # index (deterministic encode)
+        d = (cent * cent).sum(-1)[None, :] - 2.0 * (x @ cent.T)
+        return np.argmin(d, axis=1)
+
+    # -- state ----------------------------------------------------------------
+    def state_dict(self) -> dict:
+        cb = self._require_fit()
+        return {"kind": "pq", "sub_dim": self.sub_dim,
+                "n_centroids": self.n_centroids,
+                "shape": list(cb.shape), "codebooks": cb.tobytes()}
+
+    def load_state_dict(self, state: dict) -> None:
+        if not state or state.get("kind") != "pq":
+            raise ValueError(
+                f"pq codec expects codec_state kind 'pq', got {state!r}")
+        self.sub_dim = int(state["sub_dim"])
+        self.n_centroids = int(state["n_centroids"])
+        shape = tuple(state["shape"])
+        self._set_codebooks(
+            np.frombuffer(state["codebooks"], np.float32).reshape(shape))
+
+    # -- codec API ------------------------------------------------------------
+    def stream_group(self, group: str, dim: int) -> dict[str, tuple[np.dtype, tuple]]:
+        if group != "reps":
+            raise ValueError(
+                "pq codec encodes only the 'reps' stream group; pick a "
+                "different kv_codec for layer K/V streams")
+        return {group: (np.dtype(np.uint8), (self._n_sub(dim),))}
+
+    def encode_group(self, group: str, x: np.ndarray) -> dict[str, np.ndarray]:
+        if group != "reps":
+            raise ValueError(
+                "pq codec encodes only the 'reps' stream group; pick a "
+                "different kv_codec for layer K/V streams")
+        cb = self._require_fit()
+        x = np.asarray(x, np.float32)
+        m = self._n_sub(x.shape[-1])
+        if m != cb.shape[0]:
+            raise ValueError(
+                f"pq codec fitted for rep_dim={cb.shape[0] * self.sub_dim} "
+                f"but encode got rep_dim={x.shape[-1]}")
+        sub = x.reshape(*x.shape[:-1], m, self.sub_dim)
+        codes = np.empty((*x.shape[:-1], m), np.uint8)
+        for s in range(m):
+            codes[..., s] = self._nearest(
+                sub[..., s, :].reshape(-1, self.sub_dim),
+                cb[s]).reshape(x.shape[:-1]).astype(np.uint8)
+        return {group: codes}
+
+    def decode_group(self, group: str, parts):
+        codes = parts[group]
+        cb = self._require_fit()
+        m, k, sub = cb.shape
+        flat = cb.reshape(m * k, sub)
+        if isinstance(codes, np.ndarray):
+            idx = codes.astype(np.int64) + np.arange(m, dtype=np.int64) * k
+            out = flat[idx]
+        else:                              # jnp tracer: codebooks become a
+            import jax.numpy as jnp        # jit constant, lookup is a gather
+            idx = (codes.astype(jnp.int32)
+                   + jnp.arange(m, dtype=jnp.int32) * k)
+            out = jnp.asarray(flat)[idx]
+        return out.reshape(*codes.shape[:-1], m * sub)

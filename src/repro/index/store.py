@@ -44,6 +44,25 @@ codec's per-token bytes (``codec.bytes_per_token(rep_dim)``) **plus**
 ``2 * d_kv * itemsize`` when the K/V streams are present — the classic
 MORES/SDR trade: more bytes per token for strictly less query-time
 compute.
+
+**Trained codecs** (v2 only): a manifest whose codec carries state (the
+``"pq"`` product-quantization codec's per-subspace codebooks) records it
+under ``codec_state``; :meth:`open` feeds it back through
+``codec.load_state_dict`` before any stream spec is consulted, so a
+reopened index decodes with exactly the codebooks it was built with.
+
+**Token pruning** (v2 only): an index built with a ``keep_frac`` /
+``max_kept_tokens`` policy stores only each doc's highest-salience tokens
+— ``doc_lengths`` are the *kept* counts, so every consumer downstream of
+:meth:`gather_raw` (paged doc-cache pools, the split-KV join, first-stage
+pooling) sees shorter doc segments with no code changes.  The manifest
+records the policy under ``prune`` (``{"keep_frac", "max_kept_tokens",
+"layer"}``, exposed as :attr:`prune_policy`) and each shard's
+pre-pruning token counts under ``orig_lengths`` (exposed as
+:attr:`orig_doc_lengths`), so ``verify_index`` can replay the selection
+and storage accounting can compare against the unpruned projection.
+Unpruned and v1 indexes expose ``prune_policy = None`` and
+``orig_doc_lengths == doc_lengths``.
 """
 from __future__ import annotations
 
@@ -112,6 +131,10 @@ class TermRepIndex:
         # "d_kv": n_kv_heads * head_dim[, "codec": codec name]}
         # (v2 manifests only)
         self.layer_kv = dict(layer_kv) if layer_kv else None
+        # token-pruning policy from the manifest's "prune" key (None when
+        # the index stores every token); pre-pruning per-doc token counts
+        self.prune_policy: dict | None = None
+        self._orig_lengths: np.ndarray | None = None
         self.version = 1                             # v2 set by open()
         self.encode_batch = 0                        # v2 build batch shape
         self._offsets: list[tuple[int, int]] = []    # v1 build: (offset, n)
@@ -210,6 +233,13 @@ class TermRepIndex:
                 f"reader expects version {FORMAT_VERSION}")
         try:
             codec = get_codec(mani["codec"])
+            if mani.get("codec_state"):
+                codec.load_state_dict(mani["codec_state"])
+            prune = mani.get("prune") or None
+            if prune is not None:
+                prune = {"keep_frac": float(prune["keep_frac"]),
+                         "max_kept_tokens": int(prune["max_kept_tokens"]),
+                         "layer": int(prune["layer"])}
             layer_kv = mani.get("layer_kv") or None
             if layer_kv is not None:
                 norm = {"dtype": np.dtype(layer_kv["dtype"]).str,
@@ -227,11 +257,18 @@ class TermRepIndex:
                 f"malformed v2 manifest at {manifest_p!r}: {e!r}") from e
         idx.version = 2
         idx.encode_batch = int(mani.get("encode_batch", 0))
+        idx.prune_policy = prune
         streams_spec = idx.streams_spec()
-        shard_streams, rows = [], []
+        shard_streams, rows, orig_rows = [], [], []
         for si, sh in enumerate(shards):
             try:
                 lengths = np.asarray(sh["lengths"], np.int64).reshape(-1)
+                orig = np.asarray(sh.get("orig_lengths", sh["lengths"]),
+                                  np.int64).reshape(-1)
+                if len(orig) != len(lengths):
+                    raise ValueError(
+                        f"orig_lengths lists {len(orig)} docs but lengths "
+                        f"lists {len(lengths)}")
                 sdir = os.path.join(path, sh["dir"])
             except (KeyError, ValueError, TypeError) as e:
                 raise IndexFormatError(
@@ -252,9 +289,12 @@ class TermRepIndex:
             tbl = np.stack([np.full(len(lengths), si, np.int64),
                             starts.astype(np.int64), lengths], axis=1)
             rows.append(tbl)
+            orig_rows.append(orig)
             idx._n_tokens += n_tok
         table = (np.concatenate(rows, axis=0) if rows
                  else np.zeros((0, 3), np.int64))
+        idx._orig_lengths = (np.concatenate(orig_rows, axis=0) if orig_rows
+                             else np.zeros((0,), np.int64))
         if len(table) != mani.get("n_docs", len(table)):
             raise IndexFormatError(
                 f"index at {path!r}: manifest n_docs={mani.get('n_docs')} "
@@ -322,6 +362,15 @@ class TermRepIndex:
         return np.asarray([n for _, n in self._offsets], np.int64)
 
     @property
+    def orig_doc_lengths(self) -> np.ndarray:
+        """Per-doc token counts *before* index-time pruning ([N] int64).
+        Equal to :attr:`doc_lengths` for unpruned (and every v1) index —
+        the difference is exactly the tokens the prune policy dropped."""
+        if self._orig_lengths is not None:
+            return self._orig_lengths
+        return self.doc_lengths
+
+    @property
     def n_shards(self) -> int:
         return len(self._shard_streams)
 
@@ -351,8 +400,8 @@ class TermRepIndex:
         if ids.size and (ids.min() < 0 or ids.max() >= len(self)):
             raise IndexError(
                 f"doc id out of range [0, {len(self)}) in gather()")
-        pad_to = pad_to or self.max_doc_len or int(max(
-            (int(self._doc_table[d, 2]) for d in ids), default=1))
+        pad_to = pad_to or self.max_doc_len or (
+            int(self._doc_table[ids, 2].max()) if ids.size else 1)
         spec = self.streams_spec()
         if streams is not None:
             unknown = set(streams) - set(spec)
@@ -460,9 +509,15 @@ class TermRepIndex:
 
     @staticmethod
     def projected_storage_bytes(n_docs: int, avg_tokens: float, rep_dim: int,
-                                bytes_per_val: int) -> int:
-        """Paper's ClueWeb09-B projection: 112TB raw -> 2.8TB at e=128 fp16."""
-        return int(n_docs * avg_tokens * rep_dim * bytes_per_val)
+                                bytes_per_val: float,
+                                keep_frac: float = 1.0) -> int:
+        """Paper's ClueWeb09-B projection: 112TB raw -> 2.8TB at e=128 fp16.
+
+        ``bytes_per_val`` may be fractional (the pq codec's sub-byte
+        codes, e.g. 0.25 B/dim at sub_dim=4) and ``keep_frac`` scales the
+        token count for an index-time pruning policy — both orthogonal
+        multipliers on the same §6.2 formula."""
+        return int(n_docs * avg_tokens * keep_frac * rep_dim * bytes_per_val)
 
 
 class ShardIndexView:

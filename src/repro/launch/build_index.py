@@ -97,6 +97,16 @@ def main() -> None:
                          "K/V streams (layer_k/layer_v), letting the fused "
                          "query-time join skip all doc-side projections at "
                          "layer l")
+    ap.add_argument("--kv-codec", default=None,
+                    help="codec for the stored layer-l K/V streams "
+                         "(requires --store-layer-kv; int8 dequantizes "
+                         "in-register inside the join kernel)")
+    ap.add_argument("--keep-frac", type=float, default=1.0,
+                    help="index-time token pruning: keep this fraction of "
+                         "each doc's highest-salience tokens, scored by "
+                         "layer-l attention mass (1.0 = store every token)")
+    ap.add_argument("--max-kept-tokens", type=int, default=0,
+                    help="hard cap on kept tokens per doc (0 = no cap)")
     ap.add_argument("--distill-steps", type=int, default=0,
                     help="attention-MSE compressor distillation steps "
                          "before encoding (0 = keep the init compressor)")
@@ -135,14 +145,21 @@ def main() -> None:
                            n_shards=args.shards, batch_size=args.batch,
                            mesh=mesh, writer_depth=args.writer_depth,
                            backend=args.backend,
-                           store_layer_kv=args.store_layer_kv)
+                           store_layer_kv=args.store_layer_kv,
+                           kv_codec=args.kv_codec,
+                           keep_frac=args.keep_frac,
+                           max_kept_tokens=args.max_kept_tokens)
     report = builder.build(list(world.docs))
+    prune_note = ""
+    if builder.prune:
+        prune_note = (f" | pruned keep_frac={args.keep_frac} "
+                      f"cap={builder.pruned_max_doc_len} tokens/doc")
     print(f"[build_index] {report.n_docs} docs / {report.n_tokens} tokens "
           f"-> {args.out} ({report.n_shards} shards, codec={report.codec}) | "
           f"{report.storage_bytes / 2**20:.2f} MiB "
           f"({report.bytes_per_doc:.0f} B/doc) | "
           f"encode={report.encode_s:.1f}s write={report.write_s:.1f}s "
-          f"wall={report.wall_s:.1f}s")
+          f"wall={report.wall_s:.1f}s{prune_note}")
 
     index = TermRepIndex.open(args.out)
     assert len(index) == report.n_docs

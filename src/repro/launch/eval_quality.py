@@ -82,6 +82,18 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--compress-dim", type=int, default=0)
     ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--store-layer-kv", action="store_true",
+                    help="store + serve the join layer's doc-side K/V "
+                         "streams (the fused-join serving configuration)")
+    ap.add_argument("--kv-codec", default=None,
+                    help="codec for the stored layer-l K/V streams "
+                         "(requires --store-layer-kv) — evaluates the "
+                         "int8-KV operating point serving actually ships")
+    ap.add_argument("--keep-frac", type=float, default=1.0,
+                    help="index-time token pruning: keep this fraction of "
+                         "each doc's highest-salience tokens (1.0 = off)")
+    ap.add_argument("--max-kept-tokens", type=int, default=0,
+                    help="hard cap on kept tokens per doc (0 = no cap)")
     ap.add_argument("--pool", default="mean", choices=["mean", "cls"],
                     help="first-stage doc pooling over stored term reps")
     ap.add_argument("--backend", default=None,
@@ -110,7 +122,11 @@ def main() -> None:
         t0 = time.time()
         res = run_cascade(params, cfg, world, codec=codec, k=args.k,
                           k_metric=args.k_metric, n_shards=args.shards,
-                          pool=args.pool, backend=args.backend)
+                          pool=args.pool, backend=args.backend,
+                          store_layer_kv=args.store_layer_kv,
+                          kv_codec=args.kv_codec,
+                          keep_frac=args.keep_frac,
+                          max_kept_tokens=args.max_kept_tokens)
         dt = time.time() - t0
         print(f"[eval_quality] codec={codec} l={args.l} k={args.k} "
               f"({dt:.1f}s incl. index build)")

@@ -108,10 +108,18 @@ def main() -> None:
     # ---- phase 1: index (offline pipeline) ---------------------------------
     if args.load_index:
         idx = TermRepIndex.open(args.load_index)
+        prune_note = (f", pruned keep_frac="
+                      f"{idx.prune_policy['keep_frac']}"
+                      if idx.prune_policy else "")
         print(f"[index] loaded {len(idx)} docs from {args.load_index} "
               f"(v{idx.version}, {idx.n_shards} shards, "
               f"codec={idx.codec.name}, "
-              f"{idx.storage_bytes() / 2**20:.1f} MiB)")
+              f"{idx.storage_bytes() / 2**20:.1f} MiB{prune_note})")
+        if 0 < idx.max_doc_len < cfg.max_doc_len:
+            # a pruned index caps stored doc lengths below the build
+            # config — serve at the pruned shape (smaller padded joins)
+            import dataclasses
+            cfg = dataclasses.replace(cfg, max_doc_len=idx.max_doc_len)
     else:
         builder = IndexBuilder(args.index_dir, cfg, params,
                                codec=args.codec, n_shards=args.shards,

@@ -85,6 +85,93 @@ def test_identity_flags():
     assert get_codec("fp16").decode_is_identity
     assert get_codec("fp32").decode_is_identity
     assert not get_codec("int8").decode_is_identity
+    assert not get_codec("pq").decode_is_identity
     # fp16 decode hands back the stored array object: the bit-exact path
     parts = get_codec("fp16").encode(_reps(1, 4, 8, 0))
     assert get_codec("fp16").decode(parts) is parts["reps"]
+
+
+# -- product quantization ----------------------------------------------------
+
+
+def _fitted_pq(e: int, seed: int = 0, n: int = 400):
+    codec = get_codec("pq")
+    codec.fit(_reps(seed, n, e, 0), seed=seed)
+    return codec
+
+
+@settings(max_examples=16)
+@given(n_tokens=st.integers(min_value=0, max_value=9),
+       e=st.sampled_from([4, 16]),
+       scale_pow=st.integers(min_value=-2, max_value=1),
+       seed=st.integers(min_value=0, max_value=19))
+def test_pq_roundtrip_stable(n_tokens, e, scale_pow, seed):
+    codec = _fitted_pq(e, seed=seed % 3)
+    x = _reps(seed, n_tokens, e, scale_pow)
+    parts = codec.encode(x)
+    assert set(parts) == {"reps"}
+    assert parts["reps"].dtype == np.uint8
+    assert parts["reps"].shape == (n_tokens, e // codec.sub_dim)
+    dec = np.asarray(codec.decode(parts), np.float32)
+    assert dec.shape == x.shape
+    # decode lands exactly on centroids, so re-encoding its own decode is
+    # a fixed point: codes stay identical
+    parts2 = codec.encode(dec)
+    np.testing.assert_array_equal(parts["reps"], parts2["reps"])
+
+
+def test_pq_bytes_per_token_below_half_byte_per_dim():
+    codec = _fitted_pq(16)
+    # 16 dims / sub_dim=4 -> 4 uint8 codes = 0.25 B/dim, below int8's 1
+    assert codec.bytes_per_token(16) == 4
+    assert codec.bytes_per_token(16) / 16 < 0.5
+    x = _reps(0, 5, 16, 0)
+    parts = codec.encode(x)
+    assert sum(p.nbytes for p in parts.values()) == 5 * codec.bytes_per_token(16)
+
+
+def test_pq_fit_is_deterministic():
+    a, b = _fitted_pq(8, seed=5), _fitted_pq(8, seed=5)
+    np.testing.assert_array_equal(a.codebooks, b.codebooks)
+    x = _reps(1, 20, 8, 0)
+    np.testing.assert_array_equal(a.encode(x)["reps"], b.encode(x)["reps"])
+
+
+def test_pq_decode_is_device_traceable():
+    import jax
+
+    codec = _fitted_pq(16)
+    x = _reps(3, 7, 16, 0)
+    parts = codec.encode(x)
+    host = np.asarray(codec.decode(parts), np.float32)
+    dev = np.asarray(jax.jit(codec.decode)(
+        {k: np.asarray(v) for k, v in parts.items()}))
+    np.testing.assert_allclose(dev, host, rtol=1e-6, atol=1e-7)
+
+
+def test_pq_state_roundtrip():
+    codec = _fitted_pq(16)
+    clone = get_codec("pq")
+    clone.load_state_dict(codec.state_dict())
+    np.testing.assert_array_equal(clone.codebooks, codec.codebooks)
+    x = _reps(4, 9, 16, 0)
+    np.testing.assert_array_equal(codec.encode(x)["reps"],
+                                  clone.encode(x)["reps"])
+
+
+def test_pq_errors():
+    codec = get_codec("pq")
+    assert codec.needs_fit
+    with pytest.raises(ValueError, match="no codebooks"):
+        codec.encode(_reps(0, 3, 16, 0))
+    with pytest.raises(ValueError, match="divisible by sub_dim"):
+        codec.streams(7)
+    with pytest.raises(ValueError, match="only the 'reps'"):
+        codec.stream_group("layer_k", 16)
+    fitted = _fitted_pq(16)
+    assert not fitted.needs_fit
+    with pytest.raises(ValueError, match="fitted for rep_dim=16"):
+        fitted.encode(_reps(0, 3, 8, 0))
+    # stateless codecs reject a stray codec_state
+    with pytest.raises(ValueError, match="stateless"):
+        get_codec("int8").load_state_dict({"kind": "pq"})

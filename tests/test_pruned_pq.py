@@ -1,0 +1,314 @@
+"""Index-time token pruning + the PQ trained codec, end to end: build
+metadata, verify_index replay, gather paths, the paged device cache, and
+service-vs-direct score equivalence at the pruned/quantized operating
+points."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prettr import (PreTTRConfig, encode_query, init_prettr,
+                               join_and_score, make_backbone)
+from repro.data.synthetic_ir import pack_doc_batch, pack_query
+from repro.index import (IndexBuilder, TermRepIndex, prune_selection,
+                         verify_index)
+from repro.serving import RankingService
+
+
+def _cfg(l=1, compress_dim=16):
+    bb = make_backbone(n_layers=3, d_model=32, n_heads=2, d_ff=64,
+                       vocab_size=128, l=l, max_len=24,
+                       compute_dtype=jnp.float32, block_kv=8)
+    return PreTTRConfig(backbone=bb, l=l, max_query_len=8, max_doc_len=16,
+                        compress_dim=compress_dim)
+
+
+def _docs(n=11, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(5, 128, size=rng.integers(4, 15)) for _ in range(n)]
+
+
+def _build(tmp_path, name="idx", codec="fp16", n_shards=3, n_docs=11,
+           **kw):
+    cfg = _cfg()
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    docs = _docs(n_docs)
+    builder = IndexBuilder(str(tmp_path / name), cfg, params, codec=codec,
+                           n_shards=n_shards, batch_size=4, **kw)
+    report = builder.build(docs)
+    return cfg, params, docs, builder, report
+
+
+def _serve_cfg(cfg, idx):
+    """Serving config at the index's (possibly pruned) doc shape."""
+    if 0 < idx.max_doc_len < cfg.max_doc_len:
+        return dataclasses.replace(cfg, max_doc_len=idx.max_doc_len)
+    return cfg
+
+
+def _direct_scores(params, cfg, idx, q, qv):
+    """Reference path: host gather + one jitted join over every doc."""
+    n = len(idx)
+    q_reps = jax.jit(lambda p, t, v: encode_query(p, cfg, t, v))(
+        params, q[None], qv[None])
+    reps, dvalid = idx.gather(list(range(n)), pad_to=cfg.max_doc_len)
+    return np.asarray(jax.jit(
+        lambda p, qr, qv_, st, dv: join_and_score(p, cfg, qr, qv_, st, dv))(
+        params, jnp.concatenate([q_reps] * n),
+        jnp.broadcast_to(jnp.asarray(qv), (n, cfg.max_query_len)),
+        jnp.asarray(reps), jnp.asarray(dvalid)))
+
+
+# -- pruned builds -----------------------------------------------------------
+
+
+def test_pruned_build_metadata_and_verify(tmp_path):
+    cfg, params, docs, builder, report = _build(tmp_path, codec="int8",
+                                                keep_frac=0.5)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    orig = np.asarray([min(len(d) + 1, cfg.max_doc_len) for d in docs])
+    np.testing.assert_array_equal(idx.orig_doc_lengths, orig)
+    # kept counts follow the policy arithmetic exactly
+    np.testing.assert_array_equal(idx.doc_lengths,
+                                  np.maximum(1, np.ceil(0.5 * orig)))
+    assert idx.prune_policy == {"keep_frac": 0.5, "max_kept_tokens": 0,
+                                "layer": cfg.l}
+    # the manifest's max_doc_len is the policy-derived pruned cap
+    assert idx.max_doc_len == builder.pruned_max_doc_len == 8
+    assert int(idx.doc_lengths.sum()) == report.n_tokens < int(orig.sum())
+    # stored streams byte-match a fresh encode + prune_selection replay
+    assert verify_index(idx, cfg, params, docs, sample=len(docs)) == len(docs)
+
+
+def test_pruned_docs_are_salience_subsets_of_unpruned(tmp_path):
+    """Every pruned doc's stored rows appear verbatim in the unpruned
+    build (per-token encode commutes with row slicing)."""
+    cfg, params, docs, _, _ = _build(tmp_path, name="full", codec="fp16")
+    _build(tmp_path, name="half", codec="fp16", keep_frac=0.5)
+    full = TermRepIndex.open(str(tmp_path / "full"))
+    half = TermRepIndex.open(str(tmp_path / "half"))
+    pf, _ = full.gather_raw(list(range(len(docs))), pad_to=16)
+    ph, _ = half.gather_raw(list(range(len(docs))), pad_to=16)
+    for d in range(len(docs)):
+        n_kept = int(half.doc_lengths[d])
+        n_orig = int(half.orig_doc_lengths[d])
+        kept_rows = pf["reps"][d, :n_orig]
+        # stored pruned rows are a subset of the unpruned doc's rows,
+        # in ascending original order
+        got = ph["reps"][d, :n_kept]
+        hits = [np.flatnonzero((kept_rows == row).all(axis=-1))[0]
+                for row in got]
+        assert hits == sorted(hits)
+        assert len(set(hits)) == n_kept
+
+
+def test_prune_selection_policy_arithmetic():
+    sal = np.asarray([0.1, 0.9, 0.3, 0.9, 0.0, 0.5], np.float32)
+    # ceil(0.5 * 6) = 3 highest, ascending order; stable first-index ties
+    np.testing.assert_array_equal(
+        prune_selection(sal, 6, 0.5, 0), [1, 3, 5])
+    # cap wins over keep_frac; at least one token always survives
+    np.testing.assert_array_equal(prune_selection(sal, 6, 1.0, 2), [1, 3])
+    np.testing.assert_array_equal(prune_selection(sal, 6, 0.01, 0), [1])
+    np.testing.assert_array_equal(prune_selection(sal, 1, 0.01, 0), [0])
+
+
+def test_builder_rejects_bad_policy_and_rope(tmp_path):
+    cfg = _cfg()
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="keep_frac"):
+        IndexBuilder(str(tmp_path / "x"), cfg, params, keep_frac=0.0)
+    with pytest.raises(ValueError, match="max_kept_tokens"):
+        IndexBuilder(str(tmp_path / "x"), cfg, params, max_kept_tokens=-1)
+    bb = dataclasses.replace(cfg.backbone, rope=True)
+    rcfg = dataclasses.replace(cfg, backbone=bb)
+    with pytest.raises(ValueError, match="learned-position"):
+        IndexBuilder(str(tmp_path / "x"), rcfg, params, keep_frac=0.5)
+
+
+def test_one_token_docs_through_gather_cache_and_join(tmp_path):
+    """max_kept_tokens=1 is the degenerate floor: every doc shrinks to a
+    single stored token and must still flow through gather_raw, the paged
+    device cache, and the packed service join."""
+    cfg, params, docs, _, _ = _build(tmp_path, codec="int8",
+                                     max_kept_tokens=1)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    assert idx.max_doc_len == 1
+    np.testing.assert_array_equal(idx.doc_lengths,
+                                  np.ones(len(docs), np.int64))
+    parts, valid = idx.gather_raw(list(range(len(docs))))
+    assert parts["reps"].shape == (len(docs), 1, idx.rep_dim)
+    assert valid.all()
+
+    scfg = _serve_cfg(cfg, idx)
+    assert scfg.max_doc_len == 1
+    svc = RankingService(params, scfg, idx, micro_batch=4,
+                         doc_cache_mb=4, page_tokens=8, page_bucket=True)
+    q, qv = pack_query(np.asarray([7, 9, 11]), cfg.max_query_len)
+    resp = svc.rank(q, qv, list(range(len(docs))))
+    assert sorted(resp.doc_ids) == list(range(len(docs)))
+    assert np.isfinite(np.asarray(resp.scores)).all()
+    # a repeat of the same candidates is served from the device cache
+    svc.rank(q, qv, list(range(len(docs))))
+    assert svc.stats.doc_cache_hit_rate > 0
+
+    order = np.argsort(resp.doc_ids)
+    direct = _direct_scores(params, scfg, idx, q, qv)
+    np.testing.assert_allclose(np.asarray(resp.scores)[order], direct,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pruned_service_scores_match_direct(tmp_path):
+    """A keep_frac-pruned index served at the pruned shape scores exactly
+    like the host gather + direct join over the same stored bytes."""
+    cfg, params, docs, _, _ = _build(tmp_path, codec="fp16", keep_frac=0.5,
+                                     store_layer_kv=True, kv_codec="int8")
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    scfg = _serve_cfg(cfg, idx)
+    assert scfg.max_doc_len == 8
+    svc = RankingService(params, scfg, idx, micro_batch=4)
+    q, qv = pack_query(np.asarray([3, 4]), cfg.max_query_len)
+    resp = svc.rank(q, qv, list(range(len(docs))))
+    order = np.argsort(resp.doc_ids)
+    direct = _direct_scores(params, scfg, idx, q, qv)
+    np.testing.assert_allclose(np.asarray(resp.scores)[order], direct,
+                               rtol=1e-3, atol=1e-3)
+
+
+# -- pq builds ---------------------------------------------------------------
+
+
+def test_pq_build_verify_and_reopen(tmp_path):
+    """The builder auto-fits pq, the codebooks round-trip through the
+    manifest, and verify_index byte-matches the stored code streams."""
+    cfg, params, docs, builder, report = _build(tmp_path, codec="pq")
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    assert idx.codec.name == "pq"
+    np.testing.assert_array_equal(idx.codec.codebooks,
+                                  builder.codec.codebooks)
+    # 16 dims -> 4 uint8 codes/token: 0.25 B/dim, 1/8th of fp16
+    assert idx.bytes_per_token() == 4
+    assert idx.storage_bytes() == report.storage_bytes
+    assert verify_index(idx, cfg, params, docs, sample=len(docs)) == len(docs)
+
+
+def test_pq_service_scores_match_direct(tmp_path):
+    """Raw uint8 codes ship to the device and the codebook lookup runs
+    inside the scoring jit (no standalone decode dispatch); served scores
+    match the host-side gather()+join reference."""
+    cfg, params, docs, _, _ = _build(tmp_path, codec="pq")
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    svc = RankingService(params, cfg, idx, micro_batch=len(docs),
+                         doc_cache_mb=4, page_tokens=8, page_bucket=True)
+    assert svc._join_raw is not None
+    assert svc._decode is None
+    q, qv = pack_query(np.asarray([3, 4]), cfg.max_query_len)
+    resp = svc.rank(q, qv, list(range(len(docs))))
+    assert svc.stats.n_decode_dispatch == 0
+    order = np.argsort(resp.doc_ids)
+    direct = _direct_scores(params, cfg, idx, q, qv)
+    np.testing.assert_allclose(np.asarray(resp.scores)[order], direct,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pq_pruned_combined_build(tmp_path):
+    """PQ codes + token pruning compose: the fit pass sees unpruned reps,
+    the written streams carry only the survivors, verify replays both."""
+    cfg, params, docs, _, _ = _build(tmp_path, codec="pq", keep_frac=0.5)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    assert idx.codec.name == "pq" and idx.prune_policy is not None
+    assert idx.max_doc_len == 8
+    assert verify_index(idx, cfg, params, docs, sample=len(docs)) == len(docs)
+    # bytes/doc: kept tokens x 4 B (uint8 code per 4-dim subvector)
+    assert idx.storage_bytes() == int(idx.doc_lengths.sum()) * 4
+
+
+def test_pq_kv_codec_is_rejected(tmp_path):
+    """A PQ'd K/V stream would force a pre-join host decode; the builder
+    must reject it at construction, pointing at fp16/int8."""
+    cfg = _cfg()
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="only the 'reps'"):
+        IndexBuilder(str(tmp_path / "x"), cfg, params, codec="fp16",
+                     store_layer_kv=True, kv_codec="pq")
+
+
+# -- gather_raw pad_to (satellite regression) --------------------------------
+
+
+def test_gather_raw_pad_to_truncates_stored_docs(tmp_path):
+    cfg, params, docs, _, _ = _build(tmp_path, codec="fp16")
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    full, fv = idx.gather_raw(list(range(len(docs))), pad_to=16)
+    cut, cv = idx.gather_raw(list(range(len(docs))), pad_to=4)
+    assert cut["reps"].shape == (len(docs), 4, idx.rep_dim)
+    np.testing.assert_array_equal(cut["reps"], full["reps"][:, :4])
+    np.testing.assert_array_equal(cv, fv[:, :4])
+
+
+def test_gather_raw_default_pad_without_max_doc_len(tmp_path):
+    """Regression: with max_doc_len=0 metadata the vectorized gather used
+    to fall back to a per-doc python loop; the default pad is now the
+    longest *requested* doc and the result matches an explicit pad_to."""
+    cfg = _cfg()
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    docs = _docs(5)
+    tokens, lengths, valid = pack_doc_batch(docs, cfg.max_doc_len)
+    from repro.core.prettr import precompute_docs
+    reps = precompute_docs(params, cfg, jnp.asarray(tokens),
+                           jnp.asarray(valid))
+    v1 = TermRepIndex(str(tmp_path / "v1"), rep_dim=16, dtype="float16",
+                      l=1, compressed=True, max_doc_len=0)
+    v1.add_docs(np.asarray(reps), [int(n) for n in lengths])
+    v1.finalize()
+    idx = TermRepIndex.open(str(tmp_path / "v1"))
+    assert idx.max_doc_len == 0
+    ids = [2, 0, 4]
+    parts, valid_d = idx.gather_raw(ids)
+    longest = int(max(lengths[i] for i in ids))
+    assert parts["reps"].shape == (3, longest, 16)
+    ref, rv = idx.gather_raw(ids, pad_to=longest)
+    np.testing.assert_array_equal(parts["reps"], ref["reps"])
+    np.testing.assert_array_equal(valid_d, rv)
+    # the empty gather still produces a (0, 1, e) placeholder, not a crash
+    empty, ev = idx.gather_raw([])
+    assert empty["reps"].shape == (0, 1, 16) and ev.shape == (0, 1)
+
+
+# -- read-compat -------------------------------------------------------------
+
+
+def test_v1_and_unpruned_v2_expose_no_prune_metadata(tmp_path):
+    cfg, params, docs, _, _ = _build(tmp_path, codec="fp16")
+    v2 = TermRepIndex.open(str(tmp_path / "idx"))
+    assert v2.prune_policy is None
+    np.testing.assert_array_equal(v2.orig_doc_lengths, v2.doc_lengths)
+
+    tokens, lengths, valid = pack_doc_batch(docs[:4], cfg.max_doc_len)
+    from repro.core.prettr import precompute_docs
+    reps = precompute_docs(params, cfg, jnp.asarray(tokens),
+                           jnp.asarray(valid))
+    v1 = TermRepIndex(str(tmp_path / "v1"), rep_dim=16, dtype="float16",
+                      l=1, compressed=True, max_doc_len=16)
+    v1.add_docs(np.asarray(reps), [int(n) for n in lengths])
+    v1.finalize()
+    v1 = TermRepIndex.open(str(tmp_path / "v1"))
+    assert v1.prune_policy is None
+    np.testing.assert_array_equal(v1.orig_doc_lengths, v1.doc_lengths)
+
+
+def test_stateless_manifest_reopens_without_codec_state(tmp_path):
+    """fp16/int8 manifests carry no codec_state key at all."""
+    import msgpack
+    for codec in ("fp16", "int8"):
+        _build(tmp_path, name=codec, codec=codec, n_shards=1)
+        with open(str(tmp_path / codec / "manifest.msgpack"), "rb") as f:
+            mani = msgpack.unpackb(f.read())
+        assert "codec_state" not in mani
+    _build(tmp_path, name="pq", codec="pq", n_shards=1)
+    with open(str(tmp_path / "pq" / "manifest.msgpack"), "rb") as f:
+        mani = msgpack.unpackb(f.read())
+    assert mani["codec_state"]["kind"] == "pq"
