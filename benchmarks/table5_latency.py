@@ -330,6 +330,24 @@ def run_service(backend: str = "blocked", concurrency: int = 8,
             rows += [{"name": f"serving/{name}/{k}", "value": float(v),
                       "unit": units[k]} for k, v in r.items()]
 
+        # fault-hook overhead: the serving hot path carries faults.hit()
+        # probes at four sites; with no plan installed each is a single
+        # truthiness check.  Re-drive the fused configuration under an
+        # installed *empty* FaultPlan (worst inactive case: non-empty
+        # plan stack, zero matching specs) and commit the QPS ratio vs
+        # the plan-free fused row — ~1.0, gated directionally by the
+        # --check-baseline machinery like every _qps row
+        from repro.serving import FaultPlan
+        svc = RankingService(params, cfg, idx, micro_batch=micro_batch,
+                             fused=True, doc_cache_mb=doc_cache_mb)
+        with FaultPlan([]):
+            r_flt = _drive_service(svc, queries, cand_lists, concurrency)
+        overhead = r_flt["qps"] / max(1e-9, results["fused"]["qps"])
+        rows.append({"name": "serving/faults/overhead_ratio_qps",
+                     "value": float(overhead), "unit": "x"})
+        print(f"[table5] fault-hook overhead (fused QPS under empty "
+              f"FaultPlan / without): {overhead:.2f}x")
+
         # scale-out curve: the fused configuration through the router at
         # each shard count, same index + workload (per-worker cache budget
         # so the fleet's aggregate cache grows with the shard count)

@@ -84,6 +84,12 @@ def validate_serving_rows(rows: list[dict]) -> list[str]:
             "missing serving/fused_int8_pruned/qps: the token-pruned "
             "operating point has no gated throughput row "
             "(benchmarks.table5_latency.run_service writes it)")
+    if "serving/faults/overhead_ratio_qps" not in names:
+        problems.append(
+            "missing serving/faults/overhead_ratio_qps: the fault-hook "
+            "overhead row — fused QPS re-driven under an installed empty "
+            "FaultPlan over the plan-free fused QPS, ~1.0 "
+            "(benchmarks.table5_latency.run_service writes it)")
     return problems
 
 

@@ -1,11 +1,14 @@
 """PreTTR term-representation index: codec registry, offline sharded
-builder, and the multi-shard reader."""
+builder, the multi-shard reader, and the CRC-32C integrity layer."""
 from repro.index.builder import (BuildReport, IndexBuilder, prune_selection,
                                  verify_index)
 from repro.index.codecs import (StorageCodec, available_codecs, get_codec,
                                 register_codec)
-from repro.index.store import IndexFormatError, TermRepIndex
+from repro.index.integrity import chunk_checksums, crc32c
+from repro.index.store import (IndexFormatError, IndexIntegrityError,
+                               TermRepIndex)
 
-__all__ = ["TermRepIndex", "IndexFormatError", "IndexBuilder", "BuildReport",
-           "verify_index", "prune_selection", "StorageCodec",
-           "available_codecs", "get_codec", "register_codec"]
+__all__ = ["TermRepIndex", "IndexFormatError", "IndexIntegrityError",
+           "IndexBuilder", "BuildReport", "verify_index", "prune_selection",
+           "StorageCodec", "available_codecs", "get_codec", "register_codec",
+           "crc32c", "chunk_checksums"]

@@ -61,6 +61,7 @@ import jax.numpy as jnp
 from repro.core import prettr as P
 from repro.data.synthetic_ir import pack_doc_batch
 from repro.index.codecs import StorageCodec, get_codec
+from repro.index.integrity import file_chunk_checksums
 from repro.index.store import FORMAT_VERSION, TermRepIndex
 
 _STOP = object()
@@ -110,7 +111,8 @@ class _ShardWriter:
     per-token stream (the codec's, plus the optional layer-l K/V pair),
     plus the per-doc token counts the manifest needs."""
 
-    def __init__(self, root: str, shard_id: int, stream_names):
+    def __init__(self, root: str, shard_id: int, stream_names,
+                 checksum_chunk_bytes: int = 0):
         self.dir_name = f"shard-{shard_id:05d}"
         self.path = os.path.join(root, self.dir_name)
         os.makedirs(self.path, exist_ok=True)
@@ -119,6 +121,8 @@ class _ShardWriter:
             for name in stream_names}
         self.lengths: list[int] = []
         self.orig_lengths: list[int] = []
+        self.checksum_chunk_bytes = int(checksum_chunk_bytes)
+        self.checksums: dict[str, list[int]] | None = None
 
     def append(self, parts: dict[str, np.ndarray], n_tokens: int,
                orig_tokens: int | None = None):
@@ -133,12 +137,23 @@ class _ShardWriter:
             h.flush()
             os.fsync(h.fileno())
             h.close()
+        # checksum pass after the fsync: the CRCs cover exactly the bytes
+        # that hit the disk, computed once per stream at finalize (the
+        # append hot path stays untouched)
+        if self.checksum_chunk_bytes > 0:
+            self.checksums = {
+                name: file_chunk_checksums(
+                    os.path.join(self.path, f"{name}.bin"),
+                    self.checksum_chunk_bytes)
+                for name in self._handles}
 
     def manifest_row(self, with_orig: bool = False) -> dict:
         row = {"dir": self.dir_name, "n_docs": len(self.lengths),
                "lengths": self.lengths}
         if with_orig:
             row["orig_lengths"] = self.orig_lengths
+        if self.checksums is not None:
+            row["checksums"] = self.checksums
         return row
 
 
@@ -182,7 +197,8 @@ class IndexBuilder:
                  backend: str | None = None, store_layer_kv: bool = False,
                  kv_codec: str | StorageCodec | None = None,
                  keep_frac: float = 1.0, max_kept_tokens: int = 0,
-                 fit_sample: int = 256, fit_seed: int = 0):
+                 fit_sample: int = 256, fit_seed: int = 0,
+                 checksum_chunk_bytes: int = 1 << 16):
         if backend is not None:
             from repro.models.backend import apply_backend
             cfg = apply_backend(cfg, backend)
@@ -203,6 +219,11 @@ class IndexBuilder:
                 "PreTTR's BERT config)")
         self._fit_sample = max(1, int(fit_sample))
         self._fit_seed = int(fit_seed)
+        if checksum_chunk_bytes < 0:
+            raise ValueError(
+                f"checksum_chunk_bytes must be >= 0 (0 disables integrity "
+                f"checksums), got {checksum_chunk_bytes}")
+        self.checksum_chunk_bytes = int(checksum_chunk_bytes)
         # the optional layer-l K/V streams keep the *model's* storage dtype
         # (raw float projections) unless a kv_codec re-encodes them
         self.store_layer_kv = bool(store_layer_kv)
@@ -352,7 +373,8 @@ class IndexBuilder:
             self._fit_codec(docs)
         ranges = shard_ranges(n_docs, self.n_shards)
         boundaries = np.asarray([lo for lo, _ in ranges], np.int64)
-        writers = [_ShardWriter(self.out_dir, s, self._stream_names())
+        writers = [_ShardWriter(self.out_dir, s, self._stream_names(),
+                                self.checksum_chunk_bytes)
                    for s in range(self.n_shards)]
         err: list = []
         write_s = [0.0]
@@ -421,6 +443,9 @@ class IndexBuilder:
                     "encode_batch": self.batch_size,
                     "shards": [w.manifest_row(with_orig=self.prune)
                                for w in writers]}
+        if self.checksum_chunk_bytes > 0:
+            manifest["checksum"] = {"algo": "crc32c",
+                                    "chunk_bytes": self.checksum_chunk_bytes}
         state = self.codec.state_dict()
         if state is not None:
             manifest["codec_state"] = state

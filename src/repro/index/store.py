@@ -73,6 +73,7 @@ import msgpack
 import numpy as np
 
 from repro.index.codecs import codec_for_v1_dtype, get_codec
+from repro.index.integrity import chunk_checksums, crc32c
 
 FORMAT_VERSION = 2
 
@@ -80,6 +81,16 @@ FORMAT_VERSION = 2
 class IndexFormatError(Exception):
     """The on-disk index is missing, unreadable, or a format this reader
     does not understand."""
+
+
+class IndexIntegrityError(IndexFormatError):
+    """Stored stream bytes fail their manifest CRC-32C chunk checksums —
+    the index was corrupted after build time (bit-rot, torn write, a
+    fault-injection test).  Raised at :meth:`TermRepIndex.open` (full-file
+    verify) or, with ``verify_reads=True``, from the ``gather_raw`` that
+    touched the bad chunk; the serving router treats it as a shard fault
+    (retry -> failover -> degraded response) instead of serving silently
+    wrong scores."""
 
 
 def _read_msgpack(path: str, kind: str) -> dict:
@@ -137,6 +148,13 @@ class TermRepIndex:
         self._orig_lengths: np.ndarray | None = None
         self.version = 1                             # v2 set by open()
         self.encode_batch = 0                        # v2 build batch shape
+        # integrity state (v2 manifests with a "checksum" block): per-shard
+        # {stream: [crc32c per chunk]}, the chunk size, and whether every
+        # gather re-verifies the chunks it touches
+        self.checksum_chunk_bytes = 0
+        self._checksums: list[dict[str, list[int]]] | None = None
+        self._stream_paths: list[dict[str, str]] = []
+        self.verify_reads = False
         self._offsets: list[tuple[int, int]] = []    # v1 build: (offset, n)
         self._write_handle = None
         self._n_tokens = 0
@@ -193,14 +211,36 @@ class TermRepIndex:
 
     # -- serve (query time) ----------------------------------------------------
     @classmethod
-    def open(cls, path: str) -> "TermRepIndex":
+    def open(cls, path: str, *, verify: bool = True,
+             verify_reads: bool = False) -> "TermRepIndex":
         """Open a v2 (manifest + shards) or legacy v1 (single-file) index
         for reading.  Raises :class:`IndexFormatError` when ``path`` is not
-        a readable index of a known version."""
+        a readable index of a known version.
+
+        ``verify`` (default on) runs the full-file CRC-32C pass over every
+        stream whose manifest records chunk checksums, raising
+        :class:`IndexIntegrityError` on corruption; manifests without
+        checksums (v1, pre-checksum v2) open unverified as before.
+        ``verify_reads=True`` additionally re-checks the chunks every
+        ``gather_raw`` touches (costs one CRC pass over the gathered
+        byte ranges per read — see the README's fault-tolerance section);
+        it requires a checksummed manifest and raises ValueError
+        otherwise."""
         manifest_p = os.path.join(path, "manifest.msgpack")
         if os.path.exists(manifest_p):
-            return cls._open_v2(path, manifest_p)
-        return cls._open_v1(path, os.path.join(path, "meta.msgpack"))
+            idx = cls._open_v2(path, manifest_p)
+        else:
+            idx = cls._open_v1(path, os.path.join(path, "meta.msgpack"))
+        if verify and idx._checksums is not None:
+            idx.verify_integrity()
+        if verify_reads:
+            if idx._checksums is None:
+                raise ValueError(
+                    f"verify_reads=True but the index at {path!r} records "
+                    f"no chunk checksums (v1 or pre-checksum manifest); "
+                    f"rebuild it with repro.index.IndexBuilder to add them")
+            idx.verify_reads = True
+        return idx
 
     @classmethod
     def _open_v1(cls, path: str, meta_p: str) -> "TermRepIndex":
@@ -221,6 +261,7 @@ class TermRepIndex:
             "reps": _open_stream(os.path.join(path, "reps.bin"), idx.dtype,
                                  (idx.rep_dim,), idx._n_tokens)}], table)
         idx._mmap = idx._shard_streams[0]["reps"]
+        idx._stream_paths = [{"reps": os.path.join(path, "reps.bin")}]
         return idx
 
     @classmethod
@@ -259,6 +300,16 @@ class TermRepIndex:
         idx.encode_batch = int(mani.get("encode_batch", 0))
         idx.prune_policy = prune
         streams_spec = idx.streams_spec()
+        # optional integrity block: manifest-level {"algo", "chunk_bytes"}
+        # plus per-shard {stream: [crc...]}; manifests without it (built
+        # before the integrity layer) read unverified exactly as before
+        cksum = mani.get("checksum") or None
+        if cksum is not None and str(cksum.get("algo", "crc32c")) != "crc32c":
+            raise IndexFormatError(
+                f"index at {path!r} uses checksum algo "
+                f"{cksum.get('algo')!r}; this reader knows crc32c")
+        checksums: list[dict[str, list[int]]] = []
+        stream_paths: list[dict[str, str]] = []
         shard_streams, rows, orig_rows = [], [], []
         for si, sh in enumerate(shards):
             try:
@@ -284,6 +335,12 @@ class TermRepIndex:
                         f"(manifest lists {n_tok} tokens for this shard)")
                 opened[name] = _open_stream(fp, dt, row_shape, n_tok)
             shard_streams.append(opened)
+            stream_paths.append({name: os.path.join(sdir, f"{name}.bin")
+                                 for name in streams_spec})
+            sh_ck = sh.get("checksums")
+            if sh_ck is not None:
+                checksums.append({str(k): [int(c) for c in v]
+                                  for k, v in sh_ck.items()})
             starts = np.concatenate([[0], np.cumsum(lengths)[:-1]]) \
                 if len(lengths) else np.zeros((0,), np.int64)
             tbl = np.stack([np.full(len(lengths), si, np.int64),
@@ -300,12 +357,85 @@ class TermRepIndex:
                 f"index at {path!r}: manifest n_docs={mani.get('n_docs')} "
                 f"but shards list {len(table)} documents")
         idx._finish_open(shard_streams, table)
+        idx._stream_paths = stream_paths
+        if cksum is not None and len(checksums) == len(shards):
+            idx.checksum_chunk_bytes = int(cksum.get("chunk_bytes", 1 << 16))
+            idx._checksums = checksums
         return idx
 
     def _finish_open(self, shard_streams, doc_table: np.ndarray):
         self._shard_streams = shard_streams
         self._doc_table = doc_table
         self._readonly = True
+
+    # -- integrity -----------------------------------------------------------
+    def verify_integrity(self) -> int:
+        """Recompute every stream chunk's CRC-32C against the manifest and
+        raise :class:`IndexIntegrityError` on the first mismatch.  Returns
+        the number of chunks checked (0 for a checksum-less manifest)."""
+        if self._checksums is None:
+            return 0
+        cb = self.checksum_chunk_bytes
+        checked = 0
+        for si, per_stream in enumerate(self._checksums):
+            for name, want in per_stream.items():
+                arr = self._shard_streams[si].get(name)
+                arr8 = (np.asarray(arr).reshape(-1).view(np.uint8)
+                        if arr is not None and np.asarray(arr).size
+                        else np.zeros((0,), np.uint8))
+                got = chunk_checksums(arr8, cb)
+                fp = self._stream_paths[si].get(name, f"shard{si}/{name}")
+                if len(got) != len(want):
+                    raise IndexIntegrityError(
+                        f"{fp}: stream has {len(got)} chunks but manifest "
+                        f"lists {len(want)} — file truncated or extended "
+                        f"after build")
+                for ci, (w, g) in enumerate(zip(want, got)):
+                    if int(w) != int(g):
+                        raise IndexIntegrityError(
+                            f"{fp}: chunk {ci} CRC-32C mismatch "
+                            f"(manifest {int(w):#010x}, stored bytes "
+                            f"{int(g):#010x}) — stream bytes corrupted "
+                            f"after build")
+                checked += len(got)
+        return checked
+
+    def _verify_gather(self, si: int, starts: np.ndarray, lens: np.ndarray,
+                       stream_names) -> None:
+        """Re-check the CRC of every checksum chunk touched by a gather of
+        rows ``[starts, starts+lens)`` from shard ``si`` (the
+        ``verify_reads=True`` per-read path)."""
+        per_stream = self._checksums[si]
+        cb = self.checksum_chunk_bytes
+        spec = self.streams_spec()
+        for name in stream_names:
+            want = per_stream.get(name)
+            if want is None:
+                continue
+            dt, row_shape = spec[name]
+            rowbytes = dt.itemsize * int(np.prod(row_shape, dtype=np.int64))
+            lo = starts * rowbytes
+            hi = (starts + lens) * rowbytes
+            touched = np.unique(np.concatenate(
+                [np.arange(l // cb, (h - 1) // cb + 1)
+                 for l, h in zip(lo, hi) if h > l] or
+                [np.zeros((0,), np.int64)]))
+            arr8 = np.asarray(self._shard_streams[si][name]) \
+                .reshape(-1).view(np.uint8)
+            fp = self._stream_paths[si].get(name, f"shard{si}/{name}")
+            for ci in touched:
+                ci = int(ci)
+                if ci >= len(want):
+                    raise IndexIntegrityError(
+                        f"{fp}: gather touches chunk {ci} but manifest "
+                        f"lists only {len(want)} chunks")
+                got = crc32c(arr8[ci * cb:(ci + 1) * cb])
+                if got != int(want[ci]):
+                    raise IndexIntegrityError(
+                        f"{fp}: chunk {ci} CRC-32C mismatch on read "
+                        f"(manifest {int(want[ci]):#010x}, stored bytes "
+                        f"{got:#010x}) — stream bytes corrupted after "
+                        f"build")
 
     @property
     def has_layer_kv(self) -> bool:
@@ -424,6 +554,8 @@ class TermRepIndex:
             total = int(rl.sum())
             if total == 0:
                 continue
+            if self.verify_reads and self._checksums is not None:
+                self._verify_gather(int(si), starts[rsel], rl, parts.keys())
             rows = np.repeat(rsel, rl)
             cols = np.arange(total) - np.repeat(np.cumsum(rl) - rl, rl)
             src = np.repeat(starts[rsel], rl) + cols

@@ -94,6 +94,15 @@ def main() -> None:
     ap.add_argument("--legacy-join", action="store_true",
                     help="--service: score through the legacy concat join "
                          "instead of the fused split-KV path")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="--service: bounded admission — shed requests "
+                         "(ServiceOverloadError, counted in stats.n_shed) "
+                         "beyond this queue depth; 0 = unbounded")
+    ap.add_argument("--verify-reads", action="store_true",
+                    help="re-verify the CRC-32C chunk checksums of every "
+                         "gather's stored bytes (requires an index built "
+                         "with checksums; turns silent bit-rot into "
+                         "IndexIntegrityError)")
     args = ap.parse_args()
 
     from repro.models.backend import impls_for
@@ -107,7 +116,8 @@ def main() -> None:
 
     # ---- phase 1: index (offline pipeline) ---------------------------------
     if args.load_index:
-        idx = TermRepIndex.open(args.load_index)
+        idx = TermRepIndex.open(args.load_index,
+                                verify_reads=args.verify_reads)
         prune_note = (f", pruned keep_frac="
                       f"{idx.prune_policy['keep_frac']}"
                       if idx.prune_policy else "")
@@ -128,7 +138,8 @@ def main() -> None:
                                store_layer_kv=args.store_layer_kv,
                                kv_codec=args.kv_codec)
         report = builder.build(list(world.docs))
-        idx = TermRepIndex.open(args.index_dir)
+        idx = TermRepIndex.open(args.index_dir,
+                                verify_reads=args.verify_reads)
         e = cfg.compress_dim or cfg.backbone.d_model
         raw = report.n_tokens * cfg.backbone.d_model * 4
         print(f"[index] {report.n_docs} docs in {report.wall_s:.1f}s "
@@ -155,7 +166,8 @@ def main() -> None:
                                 fused=not args.legacy_join,
                                 doc_cache_mb=args.doc_cache_mb,
                                 page_tokens=args.doc_cache_page,
-                                page_bucket=args.doc_cache_bucket)
+                                page_bucket=args.doc_cache_bucket,
+                                max_queue=args.max_queue or None)
             pinned = "pinned" if devices is not None else "unpinned"
             print(f"[serve] scale-out: {args.serving_shards} shard workers "
                   f"({pinned}; "
@@ -167,7 +179,8 @@ def main() -> None:
                                  fused=not args.legacy_join,
                                  doc_cache_mb=args.doc_cache_mb,
                                  page_tokens=args.doc_cache_page,
-                                 page_bucket=args.doc_cache_bucket)
+                                 page_bucket=args.doc_cache_bucket,
+                                 max_queue=args.max_queue or None)
         # warm the jit caches (encode + the packed join shape) off the clock
         q0, qv0 = pack_query(world.queries[0], cfg.max_query_len)
         svc.rank(q0, qv0, list(world.candidates(0, k=args.candidates)),
@@ -175,15 +188,29 @@ def main() -> None:
         svc.reset_stats()
         lat_s, p20 = [], []
         t0 = time.perf_counter()
+        from repro.serving import ServiceOverloadError
+        n_degraded = 0
         for lo in range(0, world.n_queries, args.concurrency):
             for qi in range(lo, min(lo + args.concurrency, world.n_queries)):
                 q, qv = pack_query(world.queries[qi], cfg.max_query_len)
-                svc.submit(RankRequest(
+                req = RankRequest(
                     q, qv, list(world.candidates(qi, k=args.candidates)),
-                    request_id=str(qi)))
+                    request_id=str(qi))
+                try:
+                    svc.submit(req)
+                except ServiceOverloadError:
+                    # bounded admission: drain the backlog, then resubmit
+                    for resp in svc.drain():
+                        ri = int(resp.request_id)
+                        lat_s.append(resp.latency_s)
+                        n_degraded += resp.degraded
+                        p20.append(precision_at_k(
+                            world.qrels[ri][np.asarray(resp.doc_ids)], 20))
+                    svc.submit(req)
             for resp in svc.drain():
                 qi = int(resp.request_id)
                 lat_s.append(resp.latency_s)
+                n_degraded += resp.degraded
                 p20.append(precision_at_k(
                     world.qrels[qi][np.asarray(resp.doc_ids)], 20))
         wall = time.perf_counter() - t0
@@ -192,6 +219,10 @@ def main() -> None:
         cache_note = (f" doc_cache_hit={s.doc_cache_hit_rate:.2f} "
                       f"resident_docs={s.resident_docs}"
                       if svc.doc_cache is not None else "")
+        fault_note = ""
+        if s.n_shed or s.n_retries or s.n_failovers or n_degraded:
+            fault_note = (f" shed={s.n_shed} retries={s.n_retries} "
+                          f"failovers={s.n_failovers} degraded={n_degraded}")
         print(f"[serve] service mode: {len(lat_s)} queries x "
               f"{args.candidates} candidates, concurrency={args.concurrency}"
               f" | QPS={len(lat_s)/wall:.2f} p50={p50*1e3:.1f}ms "
@@ -200,8 +231,8 @@ def main() -> None:
               f"join_dispatch={s.n_join_dispatch} "
               f"decode_dispatch={s.n_decode_dispatch} "
               f"h2d={s.h2d_bytes / 2**20:.2f}MiB "
-              f"doc_hbm={s.doc_hbm_bytes / 2**20:.2f}MiB{cache_note} | "
-              f"P@20={np.mean(p20):.3f}")
+              f"doc_hbm={s.doc_hbm_bytes / 2**20:.2f}MiB{cache_note}"
+              f"{fault_note} | P@20={np.mean(p20):.3f}")
         return
 
     rr = Reranker(params, cfg, idx, micro_batch=args.micro_batch)

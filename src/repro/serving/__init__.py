@@ -1,17 +1,22 @@
 """Query-time serving: the RankingService API, the scale-out
-router/shard-worker subsystem (``repro.serving.sharded``), and the legacy
+router/shard-worker subsystem (``repro.serving.sharded``), the
+fault-injection framework (``repro.serving.faults``), and the legacy
 Reranker."""
+from repro.serving import faults
 from repro.serving.doc_cache import DeviceDocCache
+from repro.serving.faults import FaultInjected, FaultPlan, FaultSpec
 from repro.serving.reranker import Reranker
 from repro.serving.service import (BatchEngine, DeadlinePriorityPolicy,
                                    RankingService, RankRequest, RankResponse,
-                                   RerankStats, SchedulerPolicy, ServiceStats,
+                                   RerankStats, SchedulerPolicy,
+                                   ServiceOverloadError, ServiceStats,
                                    validate_doc_routing,
                                    validate_index_compat)
-from repro.serving.sharded import RankingRouter, ShardWorker
+from repro.serving.sharded import RankingRouter, ShardWorker, WorkerHealth
 
 __all__ = ["RankingService", "RankRequest", "RankResponse", "RerankStats",
            "SchedulerPolicy", "DeadlinePriorityPolicy", "ServiceStats",
-           "BatchEngine", "RankingRouter", "ShardWorker",
-           "Reranker", "DeviceDocCache", "validate_doc_routing",
-           "validate_index_compat"]
+           "ServiceOverloadError", "BatchEngine", "RankingRouter",
+           "ShardWorker", "WorkerHealth", "Reranker", "DeviceDocCache",
+           "faults", "FaultPlan", "FaultSpec", "FaultInjected",
+           "validate_doc_routing", "validate_index_compat"]

@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.core import prettr as P
 from repro.index.store import TermRepIndex
+from repro.serving import faults
 
 
 # ---------------------------------------------------------------------------
@@ -99,6 +100,19 @@ class RankResponse:
     scores: np.ndarray                    # [n] float32, same order
     stats: RerankStats
     latency_s: float = 0.0                # submit -> completion wall time
+    #: degraded-response contract: when a fault could not be retried or
+    #: failed over, the response still arrives — ``degraded=True``,
+    #: ``failed_doc_ids`` lists the candidates whose scores are invalid
+    #: (they carry ``-inf`` and sort to the bottom); every doc id NOT
+    #: listed scored bit-exactly as in a fault-free run
+    degraded: bool = False
+    failed_doc_ids: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServiceOverloadError(RuntimeError):
+    """``submit()`` shed this request: the admission queue is at the
+    configured ``max_queue`` depth (counted in ``ServiceStats.n_shed``).
+    Callers back off and resubmit; nothing was enqueued."""
 
 
 #: ServiceStats fields that are per-engine *gauges* (a snapshot of one
@@ -138,6 +152,14 @@ class ServiceStats:
     doc_hbm_bytes: int = 0                # doc-side bytes the join reads from
                                           # device memory (analytic, per batch)
     resident_docs: int = 0                # doc-cache residency gauge (last)
+    # fault-tolerance counters (all plain sums under merge): tasks
+    # re-enqueued on their own worker after a failure; tasks re-gathered
+    # through the router's full-index fallback engine; responses returned
+    # with degraded=True; requests shed at admission (max_queue)
+    n_retries: int = 0
+    n_failovers: int = 0
+    n_degraded: int = 0
+    n_shed: int = 0
     query_encode_s: float = 0.0
     load_s: float = 0.0
     combine_s: float = 0.0
@@ -195,11 +217,29 @@ class SchedulerPolicy:
     batch deadline (:meth:`batch_deadline`), or the split shape
     (:meth:`split`)."""
 
+    #: lower bound (seconds) on a router's per-worker drain timeout —
+    #: generous because a cold worker's first drain includes jit compiles;
+    #: a deadline-carrying workload tightens the bound via
+    #: :meth:`drain_timeout`, a stuck worker still gets caught
+    drain_timeout_floor: float = 300.0
+
     def __init__(self, max_split_depth: int = 2):
         self.max_split_depth = max_split_depth
 
     def admission_key(self, state: "_ReqState"):
         return (state.priority, state.seq)
+
+    def drain_timeout(self, deadlines: Sequence[float | None],
+                      n_rows: int = 0) -> float:
+        """Wall budget the router gives one worker's ``drain()`` before
+        declaring it dead: generous (every row at its slowest deadline,
+        8x slack for redispatch halves + staging), floored so a workload
+        with no deadlines still cannot wedge the router forever."""
+        ds = [d for d in deadlines if d is not None]
+        if not ds:
+            return self.drain_timeout_floor
+        return max(self.drain_timeout_floor,
+                   8.0 * max(ds) * max(1, n_rows))
 
     def batch_deadline(self, deadlines: Sequence[float | None]) -> float | None:
         """Effective deadline for a packed batch: the tightest row deadline."""
@@ -233,7 +273,7 @@ class DeadlinePriorityPolicy(SchedulerPolicy):
 class _ReqState:
     __slots__ = ("req", "rid", "seq", "n", "priority", "deadline_s",
                  "q_reps", "q_valid_j", "scores", "n_done", "t_submit",
-                 "stats")
+                 "stats", "failed_idx", "error")
 
     def __init__(self, req: RankRequest, rid: str, seq: int,
                  deadline_s: float | None):
@@ -249,6 +289,8 @@ class _ReqState:
         self.n_done = 0
         self.t_submit = time.perf_counter()
         self.stats = RerankStats(n_docs=self.n)
+        self.failed_idx: list[int] = []   # candidate rows a fault invalidated
+        self.error: BaseException | None = None
 
 
 @dataclasses.dataclass
@@ -376,10 +418,15 @@ class BatchEngine:
                  doc_cache_mb: float = 0.0,
                  page_tokens: int | None = None,
                  page_bucket: bool = False,
-                 device=None):
+                 device=None,
+                 fault_tag=None):
         self.cfg = cfg
         self.index = index
         self.micro_batch = micro_batch
+        # identifies this engine at the fault-injection sites (a shard id
+        # for ShardWorker engines, "fallback" for the router's fallback
+        # engine, None for the single-process service)
+        self.fault_tag = fault_tag
         self.policy = policy or SchedulerPolicy()
         self.prefetch_depth = max(0, prefetch_depth)
         self.device = device
@@ -608,6 +655,9 @@ class BatchEngine:
         async, and an unblocked timestamp silently books the H2D copy
         under the next combine phase."""
         t0 = time.perf_counter()
+        faults.hit("engine.stage", tag=self.fault_tag)
+        faults.hit("index.gather", tag=self.fault_tag, index=self.index,
+                   doc_ids=[r[2] for r in plan.rows])
         if self._doc_cache is not None:
             payload = self._stage_cached(plan)
         else:
@@ -696,7 +746,11 @@ class BatchEngine:
                 plan = self._next_plan()
                 if plan is None:
                     break
-                self._score_plan(plan, *self._stage(plan), done)
+                try:
+                    staged = self._stage(plan)
+                    self._score_plan(plan, *staged, done)
+                except Exception as e:                # noqa: BLE001
+                    self._fail_plan(plan, e, done)
             self.stats.wall_s += time.perf_counter() - t_wall
             return done
 
@@ -719,8 +773,16 @@ class BatchEngine:
                 plan, qr, qv, payload, load_dt, err = out_q.get()
                 inflight -= 1
                 if err is not None:
-                    raise err
-                self._score_plan(plan, qr, qv, payload, load_dt, done)
+                    # fault isolation: a staging error (bad gather, H2D
+                    # fault, injected) used to raise out of drain() and
+                    # abandon every co-packed in-flight state — fail only
+                    # this plan's rows and keep draining the rest
+                    self._fail_plan(plan, err, done)
+                    continue
+                try:
+                    self._score_plan(plan, qr, qv, payload, load_dt, done)
+                except Exception as e:                # noqa: BLE001
+                    self._fail_plan(plan, e, done)
         finally:
             in_q.put(_STOP)
             # unblock a worker stuck on a full out_q before joining
@@ -733,6 +795,38 @@ class BatchEngine:
         self.stats.wall_s += time.perf_counter() - t_wall
         return done
 
+    def _fail_plan(self, plan: _Plan, err: BaseException, done: list) -> None:
+        """Resolve an errored plan's real rows as *failed*: the row index
+        lands on its state's ``failed_idx`` (the composer flags the
+        response degraded), the score is ``-inf`` (sorts to the bottom),
+        and the state still completes — no co-packed state is lost."""
+        for s, ci, _ in plan.rows:
+            if s is None:
+                continue
+            s.failed_idx.append(ci)
+            s.error = err
+            s.scores[ci] = -np.inf
+            s.n_done += 1
+            if s.n_done == s.n:
+                done.append(s)
+
+    def abandon_pending(self) -> list:
+        """Drop every enqueued-but-unfinished state (a router failing this
+        engine over re-runs them elsewhere).  Returns the distinct states
+        whose rows were dropped; their scores/counters are untouched."""
+        states: dict[int, object] = {}
+        for s in self._waiting:
+            states[id(s)] = s
+        for rows in (self._rows,
+                     [r for p in self._replans for r in p.rows]):
+            for s, _, _ in rows:
+                if s is not None:
+                    states[id(s)] = s
+        self._waiting.clear()
+        self._rows.clear()
+        self._replans.clear()
+        return list(states.values())
+
     # -- device step ---------------------------------------------------------
     def _score_batch(self, qr, qv, payload):
         """Assemble the doc-side operands and issue exactly one pool-score
@@ -740,6 +834,7 @@ class BatchEngine:
         Cache mode: insert staged misses into the device pool, then
         gather every row from it (hit and miss rows take the identical
         compute path, so scores are bit-equal either way)."""
+        faults.hit("engine.score", tag=self.fault_tag)
         self.stats.h2d_bytes += payload.get("h2d_bytes", 0)
         if self._doc_cache is not None:
             cache = self._doc_cache
@@ -884,7 +979,8 @@ class RankingService:
                  doc_cache_mb: float = 0.0,
                  page_tokens: int | None = None,
                  page_bucket: bool = False,
-                 device=None):
+                 device=None,
+                 max_queue: int | None = None):
         if backend is not None:
             from repro.models.backend import apply_backend
             cfg = apply_backend(cfg, backend)
@@ -893,6 +989,10 @@ class RankingService:
         self.cfg = cfg
         self.index = index
         self.default_deadline_s = deadline_s
+        # bounded admission: submit() sheds (ServiceOverloadError) once
+        # this many requests are queued for the next drain; None = unbounded
+        self.max_queue = max_queue
+        self._queued = 0
         self.engine = BatchEngine(
             params, cfg, index, micro_batch=micro_batch, policy=policy,
             prefetch_depth=prefetch_depth, fused=fused,
@@ -993,6 +1093,11 @@ class RankingService:
         """Queue a request; returns its request id.  The query is encoded
         (or fetched from the query-rep LRU cache) at admission time."""
         rid = req.request_id or f"req-{self._seq}"
+        if self.max_queue is not None and self._queued >= self.max_queue:
+            self.stats.n_shed += 1
+            raise ServiceOverloadError(
+                f"request {rid} shed: {self._queued} requests already "
+                f"queued (max_queue={self.max_queue}); drain() or back off")
         if len(req.doc_ids):
             try:
                 # reject at admission: a bad id surfacing later, inside the
@@ -1020,6 +1125,7 @@ class RankingService:
         self.stats.query_encode_s += dt
         state.q_valid_j = jnp.asarray(req.q_valid)
         self.engine.enqueue(state)
+        self._queued += 1
         return rid
 
     def rank(self, q_tokens, q_valid, doc_ids, *, priority: int = 0,
@@ -1061,14 +1167,20 @@ class RankingService:
         done: list[RankResponse] = list(self._done_early)
         self._done_early.clear()
         done += [self._finalize(s) for s in self.engine.drain()]
+        self._queued = 0
         return done
 
     def _finalize(self, state: _ReqState) -> RankResponse:
         order = np.argsort(-state.scores)
         ids = list(state.req.doc_ids)
+        failed = sorted(set(state.failed_idx))
+        if failed:
+            self.stats.n_degraded += 1
         return RankResponse(
             request_id=state.rid,
             doc_ids=[ids[i] for i in order],
             scores=state.scores[order],
             stats=state.stats,
-            latency_s=time.perf_counter() - state.t_submit)
+            latency_s=time.perf_counter() - state.t_submit,
+            degraded=bool(failed),
+            failed_doc_ids=[ids[i] for i in failed])

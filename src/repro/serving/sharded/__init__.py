@@ -18,9 +18,12 @@ into the two halves that scale independently:
 Invariants: a doc's bytes never leave the shard that stores them (only
 query reps go out, only scores come back), and the merged scores are
 bit-exact against a single-process ``RankingService`` over the whole
-index for the same candidates.
+index for the same candidates.  Under faults, the router degrades
+instead of dying: per-worker :class:`WorkerHealth` state machines,
+timed drains, bounded retry, full-index failover, and degraded
+responses (see the router module docstring).
 """
-from repro.serving.sharded.router import RankingRouter
+from repro.serving.sharded.router import RankingRouter, WorkerHealth
 from repro.serving.sharded.worker import ShardTask, ShardWorker
 
-__all__ = ["RankingRouter", "ShardTask", "ShardWorker"]
+__all__ = ["RankingRouter", "ShardTask", "ShardWorker", "WorkerHealth"]

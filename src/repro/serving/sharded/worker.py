@@ -25,6 +25,7 @@ import time
 import jax
 import numpy as np
 
+from repro.serving import faults
 from repro.serving.service import (BatchEngine, RerankStats, SchedulerPolicy,
                                    ServiceStats)
 
@@ -45,7 +46,7 @@ class ShardTask:
 
     __slots__ = ("req", "rid", "seq", "n", "priority", "deadline_s",
                  "q_reps", "q_valid_j", "scores", "n_done", "t_submit",
-                 "stats", "cand_idx", "shard_id")
+                 "stats", "cand_idx", "shard_id", "failed_idx", "error")
 
     def __init__(self, rid: str, seq: int, doc_ids, cand_idx, *,
                  priority: int = 0, deadline_s: float | None = None,
@@ -64,6 +65,25 @@ class ShardTask:
         self.stats = RerankStats(n_docs=self.n)
         self.cand_idx = np.asarray(cand_idx, np.int64)
         self.shard_id = shard_id
+        self.failed_idx: list[int] = []   # task-local rows a fault hit
+        self.error: BaseException | None = None
+
+    def clone(self, sel=None, *, q_reps=None, q_valid_j=None,
+              shard_id: int | None = None) -> "ShardTask":
+        """A fresh, unscored task over a row subset (``sel`` indexes into
+        *this task's* rows; None = all) — what retry and failover enqueue,
+        so a stale drain thread's late writes land in the abandoned
+        original, never in the in-flight copy."""
+        if sel is None:
+            sel = range(self.n)
+        return ShardTask(
+            self.rid, self.seq,
+            [self.req.doc_ids[i] for i in sel],
+            self.cand_idx[list(sel)],
+            priority=self.priority, deadline_s=self.deadline_s,
+            q_reps=self.q_reps if q_reps is None else q_reps,
+            q_valid_j=self.q_valid_j if q_valid_j is None else q_valid_j,
+            shard_id=self.shard_id if shard_id is None else shard_id)
 
 
 class ShardWorker:
@@ -94,7 +114,8 @@ class ShardWorker:
             params, cfg, index_view, micro_batch=micro_batch, policy=policy,
             prefetch_depth=prefetch_depth, fused=fused,
             use_layer_kv=use_layer_kv, doc_cache_mb=doc_cache_mb,
-            page_tokens=page_tokens, page_bucket=page_bucket, device=device)
+            page_tokens=page_tokens, page_bucket=page_bucket, device=device,
+            fault_tag=self.shard_id)
 
     def put(self, x):
         """Commit an array to this worker's device (identity when the
@@ -129,4 +150,10 @@ class ShardWorker:
         Runs this worker's whole pipeline (planning, prefetch+H2D onto its
         device, scoring jits); safe to call concurrently with other
         workers' drains."""
+        faults.hit("worker.drain", tag=self.shard_id)
         return self.engine.drain()
+
+    def abandon(self) -> list[ShardTask]:
+        """Drop every enqueued-but-unfinished task (router failover path);
+        returns the distinct abandoned tasks."""
+        return self.engine.abandon_pending()

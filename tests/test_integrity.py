@@ -1,0 +1,230 @@
+"""End-to-end index integrity: the CRC-32C primitive, per-stream chunk
+checksums in the format-v2 manifest, full-file verification at open,
+per-gather verification (``verify_reads=True``), and read compat with
+checksum-less manifests (v1 and pre-checksum v2)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prettr import PreTTRConfig, init_prettr, make_backbone
+from repro.index import (IndexBuilder, IndexIntegrityError, TermRepIndex,
+                         chunk_checksums, crc32c)
+from repro.index.integrity import _crc_many, file_chunk_checksums
+
+
+def _cfg(l=1, compress_dim=16):
+    bb = make_backbone(n_layers=3, d_model=32, n_heads=2, d_ff=64,
+                       vocab_size=128, l=l, max_len=24,
+                       compute_dtype=jnp.float32, block_kv=8)
+    return PreTTRConfig(backbone=bb, l=l, max_query_len=8, max_doc_len=16,
+                        compress_dim=compress_dim)
+
+
+def _docs(n=11, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(5, 128, size=rng.integers(4, 15)) for _ in range(n)]
+
+
+def _build(tmp_path, name="idx", codec="fp16", n_shards=3, n_docs=11, **kw):
+    cfg = _cfg()
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    docs = _docs(n_docs)
+    builder = IndexBuilder(str(tmp_path / name), cfg, params, codec=codec,
+                           n_shards=n_shards, batch_size=4, **kw)
+    report = builder.build(docs)
+    return cfg, params, docs, report
+
+
+def _flip_byte(path, offset):
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+# -- the CRC-32C primitive ---------------------------------------------------
+
+
+def test_crc32c_test_vector():
+    # the canonical Castagnoli check value (RFC 3720 appendix B.4)
+    assert crc32c(b"123456789") == 0xE3069283
+    assert crc32c(b"") == 0
+
+
+def test_crc32c_streaming_matches_one_shot():
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, size=777, dtype=np.uint8).tobytes()
+    for cut in [0, 1, 8, 100, 776, 777]:
+        assert crc32c(data[cut:], crc32c(data[:cut])) == crc32c(data)
+
+
+def test_chunk_checksums_vectorized_matches_scalar():
+    rng = np.random.default_rng(1)
+    # odd length: 5 full 64-byte chunks + a 23-byte tail
+    data = rng.integers(0, 256, size=5 * 64 + 23, dtype=np.uint8)
+    got = chunk_checksums(data, 64)
+    want = [crc32c(data[i:i + 64].tobytes()) for i in range(0, len(data), 64)]
+    assert got == want
+    # _crc_many over a full-chunk matrix agrees with row-wise scalar
+    mat = data[:5 * 64].reshape(5, 64)
+    np.testing.assert_array_equal(
+        _crc_many(mat), [crc32c(r.tobytes()) for r in mat])
+
+
+def test_chunk_checksums_edge_cases(tmp_path):
+    assert chunk_checksums(np.zeros((0,), np.uint8), 64) == []
+    one = np.arange(7, dtype=np.uint8)
+    assert chunk_checksums(one, 64) == [crc32c(one.tobytes())]
+    p = str(tmp_path / "blob.bin")
+    with open(p, "wb") as f:
+        f.write(one.tobytes() * 33)
+    assert file_chunk_checksums(p, 64) == chunk_checksums(
+        np.frombuffer(one.tobytes() * 33, np.uint8), 64)
+
+
+# -- manifest round-trip on every codec --------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["fp32", "fp16", "int8", "pq"])
+def test_checksum_roundtrip(tmp_path, codec):
+    """Every codec's streams get per-chunk CRCs in the manifest, the index
+    opens with full verification, and the stored CRCs match a recompute
+    straight from the files."""
+    _build(tmp_path, codec=codec, checksum_chunk_bytes=256)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    assert idx.checksum_chunk_bytes == 256
+    assert idx._checksums is not None
+    assert idx.verify_integrity() > 0
+    for si, per_stream in enumerate(idx._checksums):
+        for name, want in per_stream.items():
+            assert want == file_chunk_checksums(
+                idx._stream_paths[si][name], 256)
+
+
+def test_checksums_cover_layer_kv_streams(tmp_path):
+    _build(tmp_path, codec="int8", store_layer_kv=True, kv_codec="int8",
+           checksum_chunk_bytes=256)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    streams = set().union(*(ck.keys() for ck in idx._checksums))
+    assert {"layer_k", "layer_v"} <= streams
+    assert idx.verify_integrity() > 0
+
+
+def test_builder_rejects_negative_chunk_bytes(tmp_path):
+    cfg = _cfg()
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="checksum_chunk_bytes"):
+        IndexBuilder(str(tmp_path / "x"), cfg, params,
+                     checksum_chunk_bytes=-1)
+
+
+# -- corruption detection ----------------------------------------------------
+
+
+def test_open_detects_corruption(tmp_path):
+    _build(tmp_path, codec="fp16", checksum_chunk_bytes=256)
+    _flip_byte(str(tmp_path / "idx" / "shard-00000" / "reps.bin"), 3)
+    with pytest.raises(IndexIntegrityError, match="CRC-32C mismatch"):
+        TermRepIndex.open(str(tmp_path / "idx"))
+    # verify=False skips the full pass (recovery/forensics escape hatch)
+    idx = TermRepIndex.open(str(tmp_path / "idx"), verify=False)
+    with pytest.raises(IndexIntegrityError):
+        idx.verify_integrity()
+
+
+def test_verify_reads_detects_corruption_at_gather(tmp_path):
+    """Per-gather verification catches bytes corrupted *after* open —
+    only gathers touching the bad chunk raise."""
+    _, _, docs, _ = _build(tmp_path, codec="fp16", n_shards=1,
+                           checksum_chunk_bytes=64)
+    idx = TermRepIndex.open(str(tmp_path / "idx"), verify_reads=True)
+    all_ids = list(range(len(docs)))
+    clean = idx.gather(all_ids, pad_to=16)
+    # corrupt the last row's bytes on disk; the open memmap sees the flip
+    path = idx._stream_paths[0]["reps"]
+    sh, start, n = (int(v) for v in idx._doc_table[all_ids[-1]])
+    dt, row_shape = idx.streams_spec()["reps"]
+    rowbytes = dt.itemsize * int(np.prod(row_shape, dtype=np.int64))
+    off = (start + n - 1) * rowbytes
+    _flip_byte(path, off)
+    with pytest.raises(IndexIntegrityError, match="mismatch on read"):
+        idx.gather(all_ids, pad_to=16)
+    with pytest.raises(IndexIntegrityError):
+        idx.gather([all_ids[-1]], pad_to=16)
+    # a gather that avoids the corrupted chunk still reads fine
+    reps, valid = idx.gather([0], pad_to=16)
+    np.testing.assert_array_equal(reps, clean[0][:1])
+    # restore the byte: gathers and the full pass go green again
+    _flip_byte(path, off)
+    got = idx.gather(all_ids, pad_to=16)
+    np.testing.assert_array_equal(got[0], clean[0])
+    assert idx.verify_integrity() > 0
+
+
+def test_verify_reads_matches_plain_gather(tmp_path):
+    _, _, docs, _ = _build(tmp_path, codec="int8", checksum_chunk_bytes=256)
+    plain = TermRepIndex.open(str(tmp_path / "idx"))
+    checked = TermRepIndex.open(str(tmp_path / "idx"), verify_reads=True)
+    ids = [10, 0, 7, 0, 3]
+    ra, va = plain.gather(ids, pad_to=16)
+    rb, vb = checked.gather(ids, pad_to=16)
+    np.testing.assert_array_equal(ra, rb)
+    np.testing.assert_array_equal(va, vb)
+
+
+# -- checksum-less read compat -----------------------------------------------
+
+
+def test_checksums_disabled_and_v2_compat(tmp_path):
+    """checksum_chunk_bytes=0 writes a pre-checksum-style manifest; the
+    index opens, serves, reports 0 verified chunks, and refuses
+    verify_reads with an actionable error."""
+    _, _, docs, _ = _build(tmp_path, codec="fp16", checksum_chunk_bytes=0)
+    idx = TermRepIndex.open(str(tmp_path / "idx"))
+    assert idx._checksums is None and idx.checksum_chunk_bytes == 0
+    assert idx.verify_integrity() == 0
+    reps, valid = idx.gather(list(range(len(docs))), pad_to=16)
+    assert reps.shape[0] == len(docs)
+    with pytest.raises(ValueError, match="IndexBuilder"):
+        TermRepIndex.open(str(tmp_path / "idx"), verify_reads=True)
+
+
+def test_v1_compat(tmp_path):
+    from repro.core.prettr import precompute_docs
+    from repro.data.synthetic_ir import pack_doc_batch
+
+    cfg = _cfg()
+    params, _ = init_prettr(jax.random.PRNGKey(0), cfg)
+    docs = _docs(5)
+    tokens, lengths, valid = pack_doc_batch(docs, cfg.max_doc_len)
+    reps = precompute_docs(params, cfg, jnp.asarray(tokens),
+                           jnp.asarray(valid))
+    v1 = TermRepIndex(str(tmp_path / "v1"), rep_dim=16, dtype="float16",
+                      l=1, compressed=True, max_doc_len=16)
+    v1.add_docs(np.asarray(reps), [int(n) for n in lengths])
+    v1.finalize()
+    idx = TermRepIndex.open(str(tmp_path / "v1"))
+    assert idx.version == 1 and idx.verify_integrity() == 0
+    with pytest.raises(ValueError, match="no chunk checksums"):
+        TermRepIndex.open(str(tmp_path / "v1"), verify_reads=True)
+
+
+def test_checksummed_gather_matches_checksum_free(tmp_path):
+    """Checksums are metadata only: the stream bytes and gather results
+    are identical with and without them."""
+    _, _, docs, _ = _build(tmp_path, name="with", codec="fp16",
+                           checksum_chunk_bytes=256)
+    _build(tmp_path, name="without", codec="fp16", checksum_chunk_bytes=0)
+    a = TermRepIndex.open(str(tmp_path / "with"))
+    b = TermRepIndex.open(str(tmp_path / "without"))
+    for si in range(a.n_shards):
+        for name, p in a._stream_paths[si].items():
+            q = b._stream_paths[si][name]
+            assert open(p, "rb").read() == open(q, "rb").read()
+    ra, va = a.gather(list(range(len(docs))), pad_to=16)
+    rb, vb = b.gather(list(range(len(docs))), pad_to=16)
+    np.testing.assert_array_equal(ra, rb)
+    np.testing.assert_array_equal(va, vb)
